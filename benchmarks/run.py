@@ -1,0 +1,193 @@
+"""Benchmark harness — one function per paper table/figure + framework tables.
+
+Prints ``name,value,derived`` CSV rows (timing rows use µs per call).
+Paper tables/figures covered:
+
+* Table 1/2  — kernel energy characterization (model inputs, checked sums)
+* Fig. 6     — Single Task vs Julienning vs Whole Application (thermal)
+* Fig. 7     — design space: N_bursts vs Q_max (both sensor variants)
+* Fig. 8     — design space: E_total overhead vs Q_max
+* §4.3       — optimizer scaling (the O(n²) column sweep vs the paper's O(n³·|P|))
+
+Framework tables (beyond paper):
+
+* julienne planners (pipeline / offload / remat) over the model zoo
+* roofline summary per (arch × shape × mesh) from experiments/dryrun/*.json
+* Pallas kernel microbenches (CPU interpret mode — correctness-path timing)
+"""
+
+import glob
+import json
+import os
+import sys
+import time
+
+import numpy as np
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.core import (  # noqa: E402
+    PAPER_FRAM_MODEL, optimal_partition, q_min, single_task_partition, sweep,
+    whole_app_partition)
+from repro.core.apps.headcount import THERMAL, VISUAL, build_graph  # noqa: E402
+
+CM = PAPER_FRAM_MODEL
+
+
+def _row(name, value, derived=""):
+    print(f"{name},{value},{derived}")
+
+
+def table12_energy_characterization():
+    g = build_graph(THERMAL)
+    _row("table2.n_tasks", g.n_tasks, "paper=5458")
+    _row("table2.e_app_J", f"{g.total_task_cost():.6f}", "paper=2.294")
+    _row("table2.cnn1_sum_mJ", f"{4125 * 0.396:.1f}", "paper=1633.5")
+    _row("table2.cnn2_sum_mJ", f"{936 * 0.396:.1f}", "paper=370.7")
+    _row("table2.cnn3_sum_mJ", f"{391 * 0.403:.1f}", "paper=157.6")
+    _row("table1.thermal_sense_mJ", 131.9, "measured in paper")
+    _row("table1.visual_sense_mJ", 4.4, "measured in paper")
+
+
+def fig6_partitioning_comparison():
+    g = build_graph(THERMAL)
+    t0 = time.time()
+    jl = optimal_partition(g, CM, 132e-3)
+    t_opt = (time.time() - t0) * 1e6
+    st = single_task_partition(g, CM)
+    wa = whole_app_partition(g, CM)
+    _row("fig6.julienne.n_bursts", jl.n_bursts, "paper=18")
+    _row("fig6.julienne.overhead_pct",
+         f"{100 * jl.e_overhead / jl.e_total:.3f}", "paper=0.12")
+    _row("fig6.julienne.overhead_mJ", f"{jl.e_overhead * 1e3:.2f}", "paper=2.79")
+    _row("fig6.single_task.n_bursts", st.n_bursts, "paper=5458")
+    _row("fig6.single_task.MB_transferred",
+         f"{st.transfer_bytes / 1e6:.1f}", "paper>437")
+    _row("fig6.single_task.overhead_gt_app",
+         int(st.e_overhead > st.e_app), "paper: overhead larger than E_app")
+    _row("fig6.whole_app.storage_J", f"{wa.max_burst:.4f}", "needs 2.294 J")
+    _row("fig6.storage_reduction_pct",
+         f"{100 * (1 - q_min(g, CM) / wa.max_burst):.2f}", "paper>94")
+    _row("fig6.optimizer_us_per_call", f"{t_opt:.0f}", "5458-task partition")
+
+
+def fig7_fig8_design_space():
+    for spec in (THERMAL, VISUAL):
+        g = build_graph(spec)
+        qmn = q_min(g, CM)
+        qs = np.geomspace(qmn, g.total_task_cost() * 1.05, 12)
+        parts = sweep(g, CM, qs)
+        for q, p in zip(qs, parts):
+            if p is None:
+                continue
+            _row(f"fig7.{spec.name}.nbursts@Q={q * 1e3:.1f}mJ", p.n_bursts,
+                 f"E_total={p.e_total * 1e3:.2f}mJ")
+        feas = [p.n_bursts for p in parts if p is not None]
+        _row(f"fig7.{spec.name}.feasible_range", f"1-{max(feas)}",
+             "paper: thermal 1-18, visual 1-456")
+        # Fig 8 caption: overhead < 3% down to storage bounds of 4.3% E_app
+        # (thermal's Q_min is already 5.8% of E_app, so report its smallest
+        # feasible point; visual reaches 0.2%).
+        small = next(p for p in parts if p is not None)
+        _row(f"fig8.{spec.name}.overhead_pct@Qmin",
+             f"{100 * small.e_overhead / small.e_total:.3f}",
+             f"paper<3% ; Qmin={qs[0] * 1e3:.1f}mJ="
+             f"{100 * qs[0] / g.total_task_cost():.1f}%Eapp")
+
+
+def optimizer_scaling():
+    from repro.core import GraphBuilder
+
+    for n in (512, 2048, 8192):
+        b = GraphBuilder()
+        b.packet("x", 1024, external=True)
+        for i in range(n):
+            w = b.packet(f"p{i}", 64)
+            b.task(f"t{i}", reads=("x",), writes=(w,), cost=1e-4)
+        g = b.build()
+        t0 = time.time()
+        optimal_partition(g, CM, 0.05)
+        _row(f"scaling.partition_n={n}_us", f"{(time.time() - t0) * 1e6:.0f}",
+             "column-sweep O(n^2); paper O(n^3 |P|)")
+
+
+def julienne_planners():
+    from repro.configs import REGISTRY
+    from repro.core.offload import min_activation_budget, plan_offload
+    from repro.core.pipeline import plan_pipeline
+    from repro.core.remat_policy import plan_remat
+
+    for arch in ("deepseek-coder-33b", "zamba2-7b", "whisper-large-v3",
+                 "phi3.5-moe-42b-a6.6b"):
+        cfg = REGISTRY[arch]
+        pp = plan_pipeline(cfg, 16, 4096, 8)
+        _row(f"pipeline.{arch}.balance", f"{pp.balance:.3f}",
+             f"bottleneck={pp.bottleneck_seconds * 1e3:.1f}ms")
+        qmn = min_activation_budget(cfg, 4, 4096)
+        _row(f"offload.{arch}.qmin_GB", f"{qmn / 1e9:.3f}",
+             "smallest feasible activation budget (§4.4), B=4")
+        op = plan_offload(cfg, 4, 4096, qmn * 2)
+        _row(f"offload.{arch}.pcie_overhead_pct",
+             f"{100 * op.overhead_fraction:.1f}",
+             f"{op.n_segments} segments @ 2×Qmin")
+        rp = plan_remat(cfg, 4, 4096, qmn * 16)
+        _row(f"remat.{arch}.recompute_pct",
+             f"{100 * rp.recompute_fraction:.1f}",
+             f"{rp.n_segments} segments @ 16×Qmin")
+
+
+def roofline_summary():
+    recs = []
+    for f in glob.glob(os.path.join(os.path.dirname(__file__), "..",
+                                    "experiments", "dryrun", "*.json")):
+        recs.append(json.load(open(f)))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    if not ok:
+        _row("roofline.cells", 0, "run launch/dryrun first")
+        return
+    _row("roofline.cells_ok", len(ok),
+         f"skipped={sum(r.get('status') == 'skipped' for r in recs)}")
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        dom = r["dominant"].replace("t_", "")
+        _row(f"roofline.{r['arch']}.{r['shape']}.{r['mesh']}",
+             f"{max(t.values()) * 1e3:.2f}ms", f"dominant={dom}")
+
+
+def kernel_microbench():
+    import jax.numpy as jnp
+
+    from repro.kernels.flash_attention.ops import flash_attention
+    from repro.kernels.rmsnorm.ops import rmsnorm
+
+    q = jnp.ones((1, 256, 4, 64), jnp.bfloat16)
+    k = jnp.ones((1, 256, 2, 64), jnp.bfloat16)
+    flash_attention(q, k, k, interpret=True).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        flash_attention(q, k, k, interpret=True).block_until_ready()
+    _row("kernel.flash_attention_us", f"{(time.time() - t0) / 3 * 1e6:.0f}",
+         "interpret mode (correctness path, not TPU perf)")
+    x = jnp.ones((1024, 512), jnp.bfloat16)
+    w = jnp.ones((512,), jnp.float32)
+    rmsnorm(x, w, interpret=True).block_until_ready()
+    t0 = time.time()
+    for _ in range(3):
+        rmsnorm(x, w, interpret=True).block_until_ready()
+    _row("kernel.rmsnorm_us", f"{(time.time() - t0) / 3 * 1e6:.0f}",
+         "interpret mode")
+
+
+def main() -> None:
+    print("name,value,derived")
+    table12_energy_characterization()
+    fig6_partitioning_comparison()
+    fig7_fig8_design_space()
+    optimizer_scaling()
+    julienne_planners()
+    roofline_summary()
+    kernel_microbench()
+
+
+if __name__ == "__main__":
+    main()

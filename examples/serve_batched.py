@@ -1,0 +1,13 @@
+"""Batched serving example: prefill + decode across the architecture zoo.
+
+Exercises the serving path (sequence-sharded KV caches / recurrent state)
+for one arch of each family — dense GQA, MoE, SSM, hybrid, enc-dec, VLM.
+
+Run:  PYTHONPATH=src python examples/serve_batched.py
+"""
+
+from repro.launch.serve import serve
+
+for arch in ("qwen3-4b", "granite-moe-1b-a400m", "xlstm-1.3b",
+             "zamba2-7b", "whisper-large-v3", "llama-3.2-vision-11b"):
+    serve(arch, batch=2, prompt_len=16, gen=8, smoke=True)

@@ -1,0 +1,60 @@
+"""Generate the §Roofline table (experiments/roofline_table.md) from the
+dry-run JSON records."""
+
+import glob
+import json
+import os
+
+HERE = os.path.dirname(__file__)
+
+
+def main():
+    recs = []
+    for f in sorted(glob.glob(os.path.join(HERE, "dryrun", "*.json"))):
+        recs.append(json.load(open(f)))
+    ok = [r for r in recs if r.get("status") == "ok"]
+    sk = [r for r in recs if r.get("status") == "skipped"]
+
+    lines = [
+        "# Roofline table — per (arch × shape × mesh)",
+        "",
+        f"{len(ok)} compiled cells, {len(sk)} documented skips "
+        "(long_500k × full-attention archs).",
+        "",
+        "Terms in seconds/step/device (methodology: EXPERIMENTS.md §Roofline);",
+        "`useful` = MODEL_FLOPS / (HLO_FLOPs × chips); `fit` = "
+        "args+temp vs 16 GB HBM.",
+        "",
+        "| arch | shape | mesh | t_compute | t_memory | t_collective |"
+        " dominant | useful | temp GB | fit |",
+        "|---|---|---|---|---|---|---|---|---|---|",
+    ]
+    for r in sorted(ok, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        t = r["roofline"]
+        mem = r.get("memory", {})
+        temp = mem.get("temp_size_in_bytes", 0) / 1e9
+        args = mem.get("argument_size_in_bytes", 0) / 1e9
+        fit = "yes" if (temp + args) <= 16.5 else "over"
+        u = r.get("useful_flops_ratio")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['t_compute']:.4f} | {t['t_memory']:.4f} "
+            f"| {t['t_collective']:.4f} | {r['dominant'].replace('t_', '')} "
+            f"| {u:.3f} | {temp:.1f} | {fit} |" if u else
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {t['t_compute']:.4f} | {t['t_memory']:.4f} "
+            f"| {t['t_collective']:.4f} | {r['dominant'].replace('t_', '')} "
+            f"| - | {temp:.1f} | {fit} |")
+    lines.append("")
+    lines.append("## Skipped cells")
+    lines.append("")
+    for r in sorted(sk, key=lambda r: (r["arch"], r["shape"], r["mesh"])):
+        lines.append(f"* {r['arch']} × {r['shape']} × {r['mesh']} — {r['reason']}")
+    out = os.path.join(HERE, "roofline_table.md")
+    with open(out, "w") as fh:
+        fh.write("\n".join(lines) + "\n")
+    print(f"wrote {out}: {len(ok)} rows")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,30 @@
+"""Assigned-architecture configs (one module per arch) + the paper's app."""
+
+from . import (  # noqa: F401
+    deepseek_coder_33b,
+    granite_moe_1b,
+    llama3_2_vision_11b,
+    phi3_5_moe,
+    qwen1_5_0_5b,
+    qwen3_4b,
+    tinyllama_1_1b,
+    whisper_large_v3,
+    xlstm_1_3b,
+    zamba2_7b,
+)
+from .base import REGISTRY, SHAPES, ModelConfig, ShapeConfig, get_config, shape_applicable
+
+ALL_ARCHS = sorted(REGISTRY)
+
+SMOKE_CONFIGS = {
+    "xlstm-1.3b": xlstm_1_3b.SMOKE,
+    "qwen1.5-0.5b": qwen1_5_0_5b.SMOKE,
+    "qwen3-4b": qwen3_4b.SMOKE,
+    "tinyllama-1.1b": tinyllama_1_1b.SMOKE,
+    "deepseek-coder-33b": deepseek_coder_33b.SMOKE,
+    "phi3.5-moe-42b-a6.6b": phi3_5_moe.SMOKE,
+    "granite-moe-1b-a400m": granite_moe_1b.SMOKE,
+    "whisper-large-v3": whisper_large_v3.SMOKE,
+    "zamba2-7b": zamba2_7b.SMOKE,
+    "llama-3.2-vision-11b": llama3_2_vision_11b.SMOKE,
+}

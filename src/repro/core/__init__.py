@@ -1,0 +1,45 @@
+"""Julienning: memory-aware partitioning of sequential task graphs.
+
+The paper's contribution (Gomez et al., 2021) as a composable library:
+specification model (:mod:`.graph`), burst cost model (:mod:`.burst`),
+optimal partitioning + storage minimization (:mod:`.partition`), the
+burst execution runtime (:mod:`.runtime`), and the TPU-side applications
+of the same optimizer (:mod:`.remat_policy`, :mod:`.offload`,
+:mod:`.pipeline`).
+"""
+
+from .burst import BurstDetail, ColumnSweep, burst_cost, burst_detail
+from .cost import (
+    CostModel,
+    LinearTransfer,
+    PAPER_FRAM_MODEL,
+    paper_fram_model,
+    tpu_host_offload_model,
+    tpu_pipeline_model,
+    tpu_remat_model,
+)
+from .graph import GraphBuilder, Packet, Task, TaskGraph
+from .partition import (
+    Infeasible,
+    Partition,
+    brute_force_partition,
+    dijkstra_partition,
+    optimal_partition,
+    optimal_partition_k,
+    optimal_partition_multi,
+    q_min,
+    q_min_bruteforce,
+    single_task_partition,
+    sweep,
+    whole_app_partition,
+)
+from .runtime import (
+    BurstRuntime,
+    DirNVM,
+    ExecutionStats,
+    MemoryNVM,
+    PowerFailure,
+    execute_atomic,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]

@@ -1,0 +1,252 @@
+"""Ladybirds-style task-graph specification model (paper §3).
+
+An application is a *sequence* of tasks. Each task reads and writes a set of
+named :class:`Packet`\\ s with statically known sizes. Packets obey SSA: each
+packet is written by exactly one task (or is an *external* input, conceptually
+written by a virtual task 0). Packets marked ``keep=True`` are application
+outputs, conceptually read by a virtual task ``n_t + 1`` — they must survive
+the final burst.
+
+The analysis products mirror the paper's §4.2 definitions:
+
+* ``writer[p]``  — index of the task writing ``p`` (0 for external packets).
+* ``l_inf[p]``   — last task index that reads or writes ``p``
+  (``n_t + 1`` for ``keep`` packets).
+* ``last_touch_before(k, p)`` — the paper's ``l_k(p)``: the highest index
+  ``< k`` of a task touching ``p``; 0 when no earlier task touches it. For an
+  external packet this is 0, so it is loaded by the first burst that uses it.
+
+Indices are 1-based throughout (task 1 .. n_t), matching the paper's notation;
+index 0 is the virtual "before the application" state.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Sequence, Tuple
+
+import numpy as np
+
+__all__ = ["Packet", "Task", "TaskGraph", "GraphBuilder"]
+
+
+@dataclasses.dataclass(frozen=True)
+class Packet:
+    """A fixed-size unit of data exchanged between tasks.
+
+    ``c0_weight`` scales the fixed (per-DMA-initiation) component of the
+    transfer cost model. Sub-packets of a contiguous array that are always
+    transferred as one coalesced DMA batch use ``c0_weight = 1/len(array)``
+    to amortize the initiation cost (see DESIGN.md: coalescing note).
+    """
+
+    name: str
+    nbytes: int
+    c0_weight: float = 1.0
+    keep: bool = False          # application output: must survive the last burst
+    external: bool = False      # present in NVM before the application starts
+    meta: Any = None            # optional payload (shape/dtype for the runtime)
+
+    def __post_init__(self) -> None:
+        if self.nbytes < 0:
+            raise ValueError(f"packet {self.name!r}: negative size")
+
+
+@dataclasses.dataclass(frozen=True)
+class Task:
+    """One atomic kernel invocation (paper: a *task*)."""
+
+    name: str
+    reads: Tuple[str, ...]
+    writes: Tuple[str, ...]
+    cost: float                               # E_task (units: whatever the cost model uses)
+    fn: Optional[Callable[..., Mapping[str, Any]]] = None  # runtime body (optional)
+
+    def __post_init__(self) -> None:
+        if self.cost < 0:
+            raise ValueError(f"task {self.name!r}: negative cost")
+        if len(set(self.writes)) != len(self.writes):
+            raise ValueError(f"task {self.name!r}: duplicate writes")
+        if len(set(self.reads)) != len(self.reads):
+            raise ValueError(f"task {self.name!r}: duplicate reads")
+        if set(self.reads) & set(self.writes):
+            raise ValueError(
+                f"task {self.name!r}: packet both read and written — model "
+                "'inout' as a read of the old version plus a write of a new one (SSA)"
+            )
+
+
+class TaskGraph:
+    """A validated sequential application with explicit data dependencies."""
+
+    def __init__(self, tasks: Sequence[Task], packets: Iterable[Packet]):
+        self.tasks: List[Task] = list(tasks)
+        self.packets: Dict[str, Packet] = {}
+        for p in packets:
+            if p.name in self.packets:
+                raise ValueError(f"duplicate packet {p.name!r}")
+            self.packets[p.name] = p
+        self._validate()
+        self._analyze()
+
+    # -- construction helpers -------------------------------------------------
+
+    @property
+    def n_tasks(self) -> int:
+        return len(self.tasks)
+
+    def task(self, index: int) -> Task:
+        """1-based task accessor (paper notation)."""
+        return self.tasks[index - 1]
+
+    def _validate(self) -> None:
+        writer: Dict[str, int] = {}
+        for p in self.packets.values():
+            if p.external:
+                writer[p.name] = 0
+        for idx, t in enumerate(self.tasks, start=1):
+            for name in t.reads:
+                if name not in self.packets:
+                    raise ValueError(f"task {t.name!r} reads unknown packet {name!r}")
+                if name not in writer:
+                    raise ValueError(
+                        f"task {t.name!r} (index {idx}) reads packet {name!r} "
+                        "before it is written"
+                    )
+            for name in t.writes:
+                if name not in self.packets:
+                    raise ValueError(f"task {t.name!r} writes unknown packet {name!r}")
+                if name in writer:
+                    raise ValueError(
+                        f"packet {name!r} written twice (SSA violation): "
+                        f"by task {writer[name]} and task {idx}"
+                    )
+                writer[name] = idx
+        for p in self.packets.values():
+            if p.name not in writer:
+                raise ValueError(f"packet {p.name!r} is never written and not external")
+        self._writer = writer
+
+    def _analyze(self) -> None:
+        n = self.n_tasks
+        # l_inf: last task touching each packet; keep-packets get n+1.
+        l_inf: Dict[str, int] = {name: self._writer[name] for name in self.packets}
+        for idx, t in enumerate(self.tasks, start=1):
+            for name in t.reads:
+                l_inf[name] = max(l_inf[name], idx)
+        for p in self.packets.values():
+            if p.keep:
+                l_inf[p.name] = n + 1
+        self.l_inf = l_inf
+
+        # Per (task, read packet): the paper's l_k(p) — last touch strictly
+        # before k. 0 when untouched before (external / first use).
+        last_touch: Dict[str, int] = {
+            name: (0 if self.packets[name].external else None)  # type: ignore[dict-item]
+            for name in self.packets
+        }
+        self.read_last_touch: List[Tuple[int, ...]] = []  # aligned with tasks (0-based list)
+        for idx, t in enumerate(self.tasks, start=1):
+            row = []
+            for name in t.reads:
+                lt = last_touch[name]
+                assert lt is not None  # _validate guarantees written-before-read
+                row.append(lt)
+            self.read_last_touch.append(tuple(row))
+            for name in t.reads:
+                last_touch[name] = idx
+            for name in t.writes:
+                last_touch[name] = idx
+
+    # -- derived quantities ----------------------------------------------------
+
+    def writer(self, packet: str) -> int:
+        """Index of the task writing ``packet`` (0 = external)."""
+        return self._writer[packet]
+
+    def total_task_cost(self) -> float:
+        """E_app: the cost of executing all tasks with no partitioning overhead."""
+        return float(sum(t.cost for t in self.tasks))
+
+    def total_packet_bytes(self) -> int:
+        """Static size of all application data (used by the naive baseline)."""
+        return int(sum(p.nbytes for p in self.packets.values()))
+
+    def live_packets(self, boundary: int) -> List[str]:
+        """Packets that are live across the boundary after task ``boundary``.
+
+        A packet is live at boundary ``b`` (between tasks b and b+1) iff it was
+        written at or before ``b`` and is used after ``b``.
+        """
+        out = []
+        for name, p in self.packets.items():
+            w = self._writer[name]
+            if w <= boundary and self.l_inf[name] > boundary:
+                out.append(name)
+        return out
+
+    def subgraph(self, lo: int, hi: int) -> "TaskGraph":
+        """Tasks lo..hi (1-based inclusive) as a standalone graph.
+
+        Packets produced before ``lo`` and read inside become external; packets
+        produced inside and used after ``hi`` become ``keep``.
+        """
+        names = set()
+        for k in range(lo, hi + 1):
+            t = self.task(k)
+            names.update(t.reads)
+            names.update(t.writes)
+        pkts = []
+        for name in names:
+            p = self.packets[name]
+            w = self._writer[name]
+            pkts.append(
+                dataclasses.replace(
+                    p,
+                    external=(w < lo),
+                    keep=(self.l_inf[name] > hi and w >= lo),
+                )
+            )
+        return TaskGraph(self.tasks[lo - 1 : hi], pkts)
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return f"TaskGraph(n_tasks={self.n_tasks}, n_packets={len(self.packets)})"
+
+
+class GraphBuilder:
+    """Incremental builder mirroring a Ladybirds metakernel.
+
+    >>> b = GraphBuilder()
+    >>> b.packet("img", 9600)
+    >>> b.task("sense", reads=(), writes=("img",), cost=0.1319)
+    >>> g = b.build()
+    """
+
+    def __init__(self) -> None:
+        self._packets: List[Packet] = []
+        self._tasks: List[Task] = []
+
+    def packet(self, name: str, nbytes: int, **kw: Any) -> str:
+        self._packets.append(Packet(name, nbytes, **kw))
+        return name
+
+    def packet_array(self, name: str, count: int, nbytes_each: int, **kw: Any) -> List[str]:
+        """A contiguous array of ``count`` sub-packets with amortized DMA init."""
+        w = 1.0 / count
+        return [
+            self.packet(f"{name}[{i}]", nbytes_each, c0_weight=w, **kw)
+            for i in range(count)
+        ]
+
+    def task(
+        self,
+        name: str,
+        reads: Sequence[str] = (),
+        writes: Sequence[str] = (),
+        cost: float = 0.0,
+        fn: Optional[Callable[..., Mapping[str, Any]]] = None,
+    ) -> None:
+        self._tasks.append(Task(name, tuple(reads), tuple(writes), float(cost), fn))
+
+    def build(self) -> TaskGraph:
+        return TaskGraph(self._tasks, self._packets)

@@ -1,0 +1,89 @@
+"""Activation-offload scheduling via Julienning (DESIGN.md §2, item 2).
+
+Volatile memory = HBM, NVM = host DRAM over PCIe — the paper's memory
+hierarchy, one level up. The *same* activation graph is partitioned under
+the **memory cost model** (burst "energy" = activation working set in
+bytes, Q_max = the HBM activation budget), then the resulting partition is
+*priced* under the **time cost model** (PCIe's ``c0 + bytes/bw``, the exact
+shape of the paper's FRAM model). Sweeping Q_max reproduces the paper's
+design-space exploration for HBM: the Pareto front of activation budget vs
+offload overhead, with Q_min (§4.4) the smallest feasible budget.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .cost import tpu_host_offload_model
+from .layer_profile import build_activation_graph, memory_cost_model, profile_model
+from .partition import Infeasible, Partition, optimal_partition, q_min
+
+__all__ = ["OffloadPlan", "plan_offload", "min_activation_budget"]
+
+
+@dataclasses.dataclass
+class OffloadPlan:
+    cfg_name: str
+    hbm_budget_bytes: float
+    bounds: List[Tuple[int, int]]
+    segment_peak_bytes: List[float]      # working set per segment (≤ budget)
+    offload_bytes: List[int]             # bytes pushed to host at each boundary
+    pcie_seconds: float                  # total offload+reload time
+    compute_seconds: float               # total compute time (for overlap check)
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def overhead_fraction(self) -> float:
+        """PCIe time / compute time — < 1 means fully overlappable."""
+        return self.pcie_seconds / max(self.compute_seconds, 1e-30)
+
+    def summary(self) -> str:
+        return (f"{self.cfg_name}: {self.n_segments} segments under "
+                f"{self.hbm_budget_bytes / 1e9:.2f} GB, offload "
+                f"{sum(self.offload_bytes) / 1e9:.2f} GB, PCIe "
+                f"{self.pcie_seconds * 1e3:.2f} ms "
+                f"({100 * self.overhead_fraction:.1f}% of compute)")
+
+
+def min_activation_budget(cfg: ModelConfig, batch: int, seq: int) -> float:
+    """Q_min (§4.4) under the memory model: the smallest HBM activation
+    budget for which any offload segmentation exists."""
+    profiles, long_lived = profile_model(cfg, batch, seq)
+    graph = build_activation_graph(profiles, long_lived, kind="memory")
+    return q_min(graph, memory_cost_model())
+
+
+def plan_offload(cfg: ModelConfig, batch: int, seq: int,
+                 hbm_budget_bytes: float) -> OffloadPlan:
+    profiles, long_lived = profile_model(cfg, batch, seq)
+    mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
+    part: Partition = optimal_partition(mem_graph, memory_cost_model(),
+                                        hbm_budget_bytes)
+
+    # price the chosen partition under the PCIe time model
+    pcie = tpu_host_offload_model()
+    pcie_s = 0.0
+    offload_bytes = []
+    for b in part.bursts:
+        w = sum(mem_graph.packets[n].nbytes for n in b.stores)
+        r = sum(mem_graph.packets[n].nbytes for n in b.loads)
+        pcie_s += (pcie.write.bytes_cost(w) if w else 0.0)
+        pcie_s += (pcie.read.bytes_cost(r) if r else 0.0)
+        offload_bytes.append(w)
+    from .cost import PEAK_FLOPS
+
+    compute_s = sum(p.flops for p in profiles) / PEAK_FLOPS
+    return OffloadPlan(
+        cfg_name=cfg.name,
+        hbm_budget_bytes=hbm_budget_bytes,
+        bounds=part.bounds,
+        segment_peak_bytes=[b.total for b in part.bursts],
+        offload_bytes=offload_bytes,
+        pcie_seconds=pcie_s,
+        compute_seconds=compute_s,
+    )

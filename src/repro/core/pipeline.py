@@ -1,0 +1,70 @@
+"""Pipeline-stage partitioning via Julienning (DESIGN.md §2, item 3).
+
+A K-stage pipeline assignment of a layer stack is exactly the paper's
+problem: tasks = layers, packets = boundary activations, burst = stage,
+E_r = the ICI hop moving the boundary activation to the next stage's
+device, and the *minimax* objective (§4.4) with a fixed burst count K
+minimizes the bottleneck stage — the quantity that sets pipeline
+throughput. Dependency-awareness buys real wins on heterogeneous stacks:
+cutting zamba2 after a Mamba block moves only the [B,S,d] activation,
+while a cut that strands the shared-attention block's embedding input
+re-sends it every microbatch.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Tuple
+
+from ..configs.base import ModelConfig
+from .cost import tpu_pipeline_model
+from .layer_profile import build_activation_graph, profile_model
+from .partition import Partition, optimal_partition_k
+
+__all__ = ["PipelinePlan", "plan_pipeline"]
+
+
+@dataclasses.dataclass
+class PipelinePlan:
+    cfg_name: str
+    n_stages: int
+    bounds: List[Tuple[int, int]]        # layer index ranges per stage (1-based)
+    stage_seconds: List[float]           # compute+comm per stage
+    stage_weight_bytes: List[int]
+    comm_bytes: List[int]                # bytes entering each stage
+    bottleneck_seconds: float
+    total_seconds: float
+
+    @property
+    def balance(self) -> float:
+        """bottleneck / mean — 1.0 is a perfectly balanced pipeline."""
+        mean = self.total_seconds / max(self.n_stages, 1)
+        return self.bottleneck_seconds / mean if mean else 1.0
+
+    def summary(self) -> str:
+        return (f"{self.cfg_name}: {self.n_stages} stages, bottleneck "
+                f"{self.bottleneck_seconds * 1e3:.3f} ms, balance "
+                f"{self.balance:.3f}, max stage weights "
+                f"{max(self.stage_weight_bytes) / 1e9:.2f} GB")
+
+
+def plan_pipeline(cfg: ModelConfig, batch: int, seq: int, n_stages: int,
+                  objective: str = "max") -> PipelinePlan:
+    profiles, long_lived = profile_model(cfg, batch, seq)
+    graph = build_activation_graph(profiles, long_lived, kind="time")
+    cm = tpu_pipeline_model()
+    part: Partition = optimal_partition_k(graph, cm, n_stages,
+                                          objective=objective)
+    stage_w = [
+        sum(p.weight_bytes for p in profiles[i - 1 : j]) for (i, j) in part.bounds
+    ]
+    return PipelinePlan(
+        cfg_name=cfg.name,
+        n_stages=n_stages,
+        bounds=part.bounds,
+        stage_seconds=[b.total for b in part.bursts],
+        stage_weight_bytes=stage_w,
+        comm_bytes=[b.read_bytes for b in part.bursts],
+        bottleneck_seconds=part.max_burst,
+        total_seconds=part.e_total,
+    )

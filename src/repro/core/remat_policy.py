@@ -1,0 +1,119 @@
+"""Memory-bounded remat segmentation via Julienning (DESIGN.md §2, item 1).
+
+Same activation graph, third cost interpretation: crossing a segment
+boundary *saves* the boundary activation (HBM bytes, cheap) and the
+backward pass *recomputes* the segment interior (FLOPs). Julienning under
+the memory model bounds the per-segment working set; the chosen boundaries
+are then priced as recompute seconds. For homogeneous stacks this recovers
+the √L-style uniform segmentation; for heterogeneous stacks (MoE vs dense,
+Mamba vs shared-attention in zamba2) the boundaries land after *cheap*
+layers — the dependency-aware placement the paper argues for.
+
+``segments_for_scan`` converts a plan into the (n_segments, seg_len) shape
+needed for the double-scan lowering of a homogeneous layer stack.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import List, Optional, Tuple
+
+from ..configs.base import ModelConfig
+from .cost import PEAK_FLOPS
+from .layer_profile import build_activation_graph, memory_cost_model, profile_model
+from .partition import Partition, optimal_partition
+
+__all__ = ["RematPlan", "plan_remat", "segments_for_scan"]
+
+
+@dataclasses.dataclass
+class RematPlan:
+    cfg_name: str
+    hbm_budget_bytes: float
+    bounds: List[Tuple[int, int]]
+    saved_bytes: int                 # boundary activations kept in HBM
+    recompute_seconds: float         # extra forward time paid in backward
+    compute_seconds: float           # one clean forward
+
+    @property
+    def n_segments(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def recompute_fraction(self) -> float:
+        return self.recompute_seconds / max(self.compute_seconds, 1e-30)
+
+    def summary(self) -> str:
+        return (f"{self.cfg_name}: {self.n_segments} remat segments under "
+                f"{self.hbm_budget_bytes / 1e9:.2f} GB, saved "
+                f"{self.saved_bytes / 1e9:.2f} GB, recompute overhead "
+                f"{100 * self.recompute_fraction:.1f}%")
+
+
+def plan_remat(cfg: ModelConfig, batch: int, seq: int,
+               hbm_budget_bytes: float) -> RematPlan:
+    """Minimize recompute subject to (saved boundaries + transient working
+    set) ≤ budget.
+
+    Saved boundary activations occupy HBM *persistently* until backward, so
+    the budget binds the sum of saves plus the largest segment's transient
+    working set. We sweep the per-segment bound Q (the paper's design-space
+    exploration) and keep the feasible partition with the least recompute —
+    smaller Q ⇒ more boundaries ⇒ less recompute but more saved bytes.
+    """
+    import numpy as np
+
+    from .partition import Infeasible, q_min as _q_min, sweep as _sweep
+
+    profiles, long_lived = profile_model(cfg, batch, seq)
+    mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
+    mem = memory_cost_model()
+    qmn = _q_min(mem_graph, mem)
+    qs = list(np.geomspace(qmn, max(hbm_budget_bytes, qmn * 1.0001), 24))
+    part: Optional[Partition] = None
+    best_recompute = None
+    for cand in _sweep(mem_graph, mem, qs):
+        if cand is None:
+            continue
+        saved_c = sum(mem_graph.packets[n].nbytes
+                      for b in cand.bursts for n in b.stores)
+        if saved_c + cand.max_burst > hbm_budget_bytes:
+            continue
+        boundary = {j for (_, j) in cand.bounds}
+        rec = sum(p.flops for i, p in enumerate(profiles, 1) if i not in boundary)
+        if best_recompute is None or rec < best_recompute:
+            best_recompute, part = rec, cand
+    if part is None:
+        raise Infeasible(
+            f"no remat segmentation fits {hbm_budget_bytes / 1e9:.2f} GB "
+            f"(transient Q_min alone is {qmn / 1e9:.2f} GB)")
+    saved = sum(
+        mem_graph.packets[n].nbytes for b in part.bursts for n in b.stores)
+    # backward recomputes each segment's interior; the layers whose outputs
+    # are saved boundaries need no recompute — so more (smaller) segments
+    # trade HBM for less recompute, the knob the Q_max sweep turns.
+    boundary_layers = {j for (_, j) in part.bounds}
+    recompute = sum(
+        p.flops for idx, p in enumerate(profiles, start=1)
+        if idx not in boundary_layers) / PEAK_FLOPS
+    compute = sum(p.flops for p in profiles) / PEAK_FLOPS
+    return RematPlan(
+        cfg_name=cfg.name,
+        hbm_budget_bytes=hbm_budget_bytes,
+        bounds=part.bounds,
+        saved_bytes=int(saved),
+        recompute_seconds=recompute,
+        compute_seconds=compute,
+    )
+
+
+def segments_for_scan(n_layers: int, plan: RematPlan) -> Tuple[int, int]:
+    """(n_segments, seg_len) for a double-scan lowering: the closest uniform
+    shape to the julienne boundaries that divides ``n_layers``."""
+    want = max(plan.n_segments, 1)
+    best = min(
+        (s for s in range(1, n_layers + 1) if n_layers % s == 0),
+        key=lambda s: abs(s - want),
+    )
+    return best, n_layers // best

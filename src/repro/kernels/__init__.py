@@ -1,0 +1,6 @@
+"""Pallas TPU kernels for the perf-critical compute layers.
+
+Each kernel ships three modules: ``kernel.py`` (pl.pallas_call + explicit
+BlockSpec VMEM tiling), ``ops.py`` (jit'd model-layout wrapper, interpret=True
+on CPU), ``ref.py`` (pure-jnp oracle used by tests/test_kernels.py).
+"""

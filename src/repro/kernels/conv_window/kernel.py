@@ -1,0 +1,90 @@
+"""Head-count CNN window scorer — Pallas TPU kernel (the paper's §5 hot spot).
+
+Scores a batch of 12×12 image windows with the same small CNN the paper runs
+per window (conv 3×3×8 → relu → 2×2 maxpool → conv 3×3×8×16 → relu → global
+mean pool → fc): ~50 k MACs per window (Table 2's CNN kernels). The
+MCU executes one window per task; the TPU adaptation batches ``blk`` windows
+per grid step and rewrites both convolutions as im2col GEMMs so they run on
+the MXU — the VMEM working set is the window block plus the (tiny) weights.
+
+This is the "kernels of the paper as Pallas kernels" demonstrator; the
+batteryless energy story lives in repro.core, this shows the same compute
+expressed TPU-natively (DESIGN.md §2, hardware-adaptation record).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+WIN = 12
+C1, C2 = 8, 16
+
+
+def _im2col(x, h, w, kh, kw):
+    """x: [N, h, w, c] → [N, (h-kh+1)·(w-kw+1), kh·kw·c] via unrolled shifts."""
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(x[:, dy : dy + h - kh + 1, dx : dx + w - kw + 1, :])
+    patch = jnp.concatenate(cols, axis=-1)  # [N, h', w', kh·kw·c]
+    return patch.reshape(x.shape[0], -1, kh * kw * x.shape[-1])
+
+
+def _conv_window_kernel(win_ref, w1_ref, b1_ref, w2_ref, b2_ref, fc_ref,
+                        fcb_ref, o_ref):
+    x = win_ref[...].astype(jnp.float32)            # [blk, 12, 12]
+    N = x.shape[0]
+    x = x[..., None]                                 # [blk, 12, 12, 1]
+
+    # conv1 3×3×1×8 as im2col GEMM → [blk, 10·10, 8]
+    p1 = _im2col(x, WIN, WIN, 3, 3)                  # [blk, 100, 9]
+    w1 = w1_ref[...].astype(jnp.float32).reshape(9, C1)
+    h1 = jax.lax.dot_general(p1, w1, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    h1 = jax.nn.relu(h1 + b1_ref[...].astype(jnp.float32))
+    h1 = h1.reshape(N, 10, 10, C1)
+
+    # 2×2 max pool → [blk, 5, 5, 8]
+    h1 = jnp.maximum(jnp.maximum(h1[:, 0::2, 0::2], h1[:, 1::2, 0::2]),
+                     jnp.maximum(h1[:, 0::2, 1::2], h1[:, 1::2, 1::2]))
+
+    # conv2 3×3×8×16 as im2col GEMM → [blk, 3·3, 16]
+    p2 = _im2col(h1, 5, 5, 3, 3)                     # [blk, 9, 72]
+    w2 = w2_ref[...].astype(jnp.float32).reshape(9 * C1, C2)
+    h2 = jax.lax.dot_general(p2, w2, (((2,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    h2 = jax.nn.relu(h2 + b2_ref[...].astype(jnp.float32))
+
+    feat = h2.mean(axis=1)                           # [blk, 16]
+    score = feat @ fc_ref[...].astype(jnp.float32) + fcb_ref[0]
+    o_ref[...] = score.astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("blk", "interpret"))
+def conv_window_scores(windows, w1, b1, w2, b2, fc, fc_b, *, blk: int = 128,
+                       interpret: bool = False):
+    """windows: [N, 12, 12] float32 → scores [N]."""
+    N = windows.shape[0]
+    blk = min(blk, N)
+    if N % blk:
+        blk = next(b for b in range(blk, 0, -1) if N % b == 0)
+    return pl.pallas_call(
+        _conv_window_kernel,
+        grid=(N // blk,),
+        in_specs=[
+            pl.BlockSpec((blk, WIN, WIN), lambda i: (i, 0, 0)),
+            pl.BlockSpec((3, 3, 1, C1), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((C1,), lambda i: (0,)),
+            pl.BlockSpec((3, 3, C1, C2), lambda i: (0, 0, 0, 0)),
+            pl.BlockSpec((C2,), lambda i: (0,)),
+            pl.BlockSpec((C2,), lambda i: (0,)),
+            pl.BlockSpec((1,), lambda i: (0,)),
+        ],
+        out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((N,), jnp.float32),
+        interpret=interpret,
+    )(windows, w1, b1, w2, b2, fc, fc_b.reshape(1))

@@ -1,0 +1,23 @@
+"""Jit'd wrapper: score image windows with the head-count CNN weights dict."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import conv_window_scores
+from .ref import conv_window_scores_ref  # noqa: F401
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def score_windows(windows, weights, *, interpret: bool | None = None):
+    """windows: [N, 12, 12]; weights: the ``cnn_weights()`` dict → [N]."""
+    if interpret is None:
+        interpret = _is_cpu()
+    return conv_window_scores(
+        jnp.asarray(windows), weights["conv1"], weights["b1"],
+        weights["conv2"], weights["b2"], weights["fc"], weights["fc_b"],
+        interpret=interpret)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle: the head-count window CNN via lax.conv (the same math as
+``repro.core.apps.headcount._jax_kernels``)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def conv_window_scores_ref(windows, w1, b1, w2, b2, fc, fc_b):
+    """windows: [N, 12, 12] → scores [N]."""
+    x = windows.astype(jnp.float32)[..., None]
+    x = jax.lax.conv_general_dilated(
+        x, w1.astype(jnp.float32), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b1
+    x = jax.nn.relu(x)
+    x = jax.lax.reduce_window(x, -jnp.inf, jax.lax.max,
+                              (1, 2, 2, 1), (1, 2, 2, 1), "VALID")
+    x = jax.lax.conv_general_dilated(
+        x, w2.astype(jnp.float32), (1, 1), "VALID",
+        dimension_numbers=("NHWC", "HWIO", "NHWC")) + b2
+    x = jax.nn.relu(x)
+    feat = x.mean(axis=(1, 2))
+    return feat @ fc.astype(jnp.float32) + fc_b

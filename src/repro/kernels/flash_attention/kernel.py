@@ -1,0 +1,106 @@
+"""Causal GQA flash attention — Pallas TPU kernel.
+
+Grid: (B·KV, Sq/blk_q, Sk/blk_k), k-block innermost (sequential on TPU), with
+the online-softmax running statistics (m, l) and the output accumulator held
+in VMEM scratch across the k iterations — the HBM-resident [Sq, Sk] score
+matrix of the naive form never exists, which is the whole point (see
+EXPERIMENTS.md §Perf: the jnp fallback's f32 score blocks dominate the
+memory roofline term).
+
+Block shapes are explicit BlockSpecs; defaults (blk_q = blk_k = 128,
+hd ∈ {64, 128}) keep the VMEM working set
+  q (blk_q·G·hd) + k/v (2·blk_k·hd) + acc (blk_q·G·hd·4B) + scores
+well under 1 MiB for G ≤ 8 and align the MXU contractions to 128.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_scr, l_scr, acc_scr, *,
+                  scale: float, blk_q: int, blk_k: int, n_k: int, causal: bool):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                       # [blk_q, G, hd]
+    k = k_ref[0]                       # [blk_k, hd]
+    v = v_ref[0]                       # [blk_k, hd]
+    G = q.shape[1]
+    hd = q.shape[2]
+
+    qf = q.reshape(blk_q * G, hd)
+    s = jax.lax.dot_general(qf, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s.reshape(blk_q, G, blk_k) * scale
+
+    if causal:
+        q_pos = iq * blk_q + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, blk_k), 0)
+        k_pos = ik * blk_k + jax.lax.broadcasted_iota(jnp.int32, (blk_q, 1, blk_k), 2)
+        s = jnp.where(q_pos >= k_pos, s, NEG_INF)
+
+    m_prev = m_scr[...]                # [blk_q, G]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_new)
+    p = jnp.exp(s - m_new[..., None])  # [blk_q, G, blk_k]
+    l_scr[...] = l_scr[...] * alpha + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p.reshape(blk_q * G, blk_k).astype(v.dtype), v,
+        (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    acc_scr[...] = acc_scr[...] * alpha[..., None] + pv.reshape(blk_q, G, hd)
+    m_scr[...] = m_new
+
+    @pl.when(ik == n_k - 1)
+    def _finalize():
+        denom = jnp.maximum(l_scr[...], 1e-30)[..., None]
+        o_ref[0] = (acc_scr[...] / denom).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "blk_q", "blk_k", "interpret"),
+)
+def flash_attention_bkv(q, k, v, *, causal: bool = True, blk_q: int = 128,
+                        blk_k: int = 128, interpret: bool = False):
+    """q: [BKV, Sq, G, hd]; k, v: [BKV, Sk, hd] → o like q."""
+    BKV, Sq, G, hd = q.shape
+    Sk = k.shape[1]
+    blk_q = min(blk_q, Sq)
+    blk_k = min(blk_k, Sk)
+    assert Sq % blk_q == 0 and Sk % blk_k == 0, (Sq, blk_q, Sk, blk_k)
+    n_q, n_k = Sq // blk_q, Sk // blk_k
+    scale = hd ** -0.5
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, blk_q=blk_q, blk_k=blk_k, n_k=n_k,
+        causal=causal)
+    return pl.pallas_call(
+        kernel,
+        grid=(BKV, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, blk_q, G, hd), lambda b, iq, ik: (b, iq, 0, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, iq, ik: (b, ik, 0)),
+            pl.BlockSpec((1, blk_k, hd), lambda b, iq, ik: (b, ik, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, blk_q, G, hd), lambda b, iq, ik: (b, iq, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((BKV, Sq, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((blk_q, G), jnp.float32),       # running max m
+            pltpu.VMEM((blk_q, G), jnp.float32),       # running sum l
+            pltpu.VMEM((blk_q, G, hd), jnp.float32),   # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,24 @@
+"""Pure-jnp oracle for the flash attention kernel (exact softmax)."""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """q: [BKV, Sq, G, hd]; k, v: [BKV, Sk, hd] → [BKV, Sq, G, hd] (fp32 math)."""
+    qf = q.astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    scale = q.shape[-1] ** -0.5
+    s = jnp.einsum("bqgh,bkh->bqgk", qf, kf) * scale
+    if causal:
+        Sq, Sk = q.shape[1], k.shape[1]
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bqgk,bkh->bqgh", p, vf)
+    return o.astype(q.dtype)

@@ -1,0 +1,116 @@
+"""Chunked mLSTM cell — Pallas TPU kernel (the xlstm-1.3b hot spot).
+
+Grid: (B·H, n_chunks) with the chunk index innermost (sequential on TPU).
+The matrix memory C [hd, hd], normalizer n [hd] and stabilizer m (scalar)
+live in VMEM scratch across chunk iterations — the kernel computes, per
+chunk: the intra-chunk masked linear attention (two MXU GEMMs on [L, hd]
+tiles), the inter-chunk contribution from the carried state, and the state
+update — the exact computation of ``repro.models.xlstm.mlstm_chunked``,
+against which it is verified (tests/test_kernels.py).
+
+Block shapes: q/k/v [L, hd] per (b·h, chunk); gate pre-activations [L]
+arrive padded to [L, 1]. Default L=128 aligns the GEMMs with the MXU.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _mlstm_kernel(q_ref, k_ref, v_ref, i_ref, f_ref, o_ref,
+                  C_scr, n_scr, m_scr, *, L: int):
+    ic = pl.program_id(1)
+
+    @pl.when(ic == 0)
+    def _init():
+        C_scr[...] = jnp.zeros_like(C_scr)
+        n_scr[...] = jnp.zeros_like(n_scr)
+        m_scr[...] = jnp.full_like(m_scr, NEG_INF)
+
+    q = q_ref[0].astype(jnp.float32)        # [L, hd]
+    k = k_ref[0].astype(jnp.float32)
+    v = v_ref[0].astype(jnp.float32)
+    i_pre = i_ref[0][:, 0].astype(jnp.float32)   # [L]
+    f_pre = f_ref[0][:, 0].astype(jnp.float32)
+
+    logf = jax.nn.log_sigmoid(f_pre)
+    cumf = jnp.cumsum(logf)                 # [L]
+    # D[a, b] = cumf_a − cumf_b + i_b for b ≤ a
+    D = cumf[:, None] - cumf[None, :] + i_pre[None, :]
+    ar = jax.lax.broadcasted_iota(jnp.int32, (L, L), 0)
+    ac = jax.lax.broadcasted_iota(jnp.int32, (L, L), 1)
+    D = jnp.where(ar >= ac, D, NEG_INF)
+
+    m_prev = m_scr[0]
+    m_intra = D.max(axis=1)                             # [L]
+    m_inter = cumf + m_prev
+    m_i = jnp.maximum(m_intra, m_inter)
+
+    sc = jnp.exp(D - m_i[:, None])
+    qk = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, L]
+    w = sc * qk
+    y_num = jax.lax.dot_general(w, v, (((1,), (0,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_den = w.sum(axis=1)
+
+    g_inter = jnp.exp(m_inter - m_i)                    # [L]
+    qC = jax.lax.dot_general(q, C_scr[...], (((1,), (0,)), ((), ())),
+                             preferred_element_type=jnp.float32)  # [L, hd]
+    qn = q @ n_scr[...]                                  # [L]
+    y_num = y_num + g_inter[:, None] * qC
+    y_den = y_den + g_inter * qn
+    o_ref[0] = (y_num / jnp.maximum(jnp.abs(y_den), 1.0)[:, None]).astype(o_ref.dtype)
+
+    # state update to end of chunk
+    m_new = jnp.maximum(cumf[-1] + m_prev, (cumf[-1] - cumf + i_pre).max())
+    gdec = jnp.exp(cumf[-1] + m_prev - m_new)
+    gsrc = jnp.exp(cumf[-1] - cumf + i_pre - m_new)      # [L]
+    kg = k * gsrc[:, None]
+    C_scr[...] = C_scr[...] * gdec + jax.lax.dot_general(
+        kg, v, (((0,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    n_scr[...] = n_scr[...] * gdec + kg.sum(axis=0)
+    m_scr[0] = m_new
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def mlstm_chunk_bh(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+                   interpret: bool = False):
+    """q/k/v: [BH, S, hd]; i_pre/f_pre: [BH, S] → y [BH, S, hd].
+
+    Zero initial state (the kernel targets train/prefill from scratch; the
+    carried-state variant threads (C, n, m) through HBM between calls).
+    """
+    BH, S, hd = q.shape
+    L = min(chunk, S)
+    assert S % L == 0
+    n_chunks = S // L
+    ip = i_pre[..., None]
+    fp = f_pre[..., None]
+
+    return pl.pallas_call(
+        functools.partial(_mlstm_kernel, L=L),
+        grid=(BH, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, L, 1), lambda b, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, L, hd), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((hd, hd), jnp.float32),   # C
+            pltpu.VMEM((hd,), jnp.float32),      # n
+            pltpu.VMEM((1,), jnp.float32),       # m
+        ],
+        interpret=interpret,
+    )(q, k, v, ip, fp)

@@ -1,0 +1,27 @@
+"""Jit'd wrapper: model-layout chunked mLSTM cell."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import mlstm_chunk_bh
+from .ref import mlstm_ref  # noqa: F401
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def mlstm_cell(q, k, v, i_pre, f_pre, *, chunk: int = 128,
+               interpret: bool | None = None):
+    """q/k/v: [B, S, H, hd]; gates [B, S, H] → [B, S, H, hd]."""
+    if interpret is None:
+        interpret = _is_cpu()
+    B, S, H, hd = q.shape
+
+    def fold(a):
+        return a.transpose(0, 2, 1, *range(3, a.ndim)).reshape(B * H, S, *a.shape[3:])
+
+    y = mlstm_chunk_bh(fold(q), fold(k), fold(v), fold(i_pre), fold(f_pre),
+                       chunk=chunk, interpret=interpret)
+    return y.reshape(B, H, S, hd).transpose(0, 2, 1, 3)

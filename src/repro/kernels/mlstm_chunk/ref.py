@@ -1,0 +1,33 @@
+"""Step-by-step sequential oracle for the chunked mLSTM kernel."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def mlstm_ref(q, k, v, i_pre, f_pre):
+    """q/k/v: [BH, S, hd]; gates [BH, S] → [BH, S, hd]. Exact recurrence."""
+    BH, S, hd = q.shape
+    qf, kf, vf = (a.astype(jnp.float32) for a in (q, k, v))
+    i_pre = i_pre.astype(jnp.float32)
+    f_pre = f_pre.astype(jnp.float32)
+
+    def step(carry, t):
+        C, n, m = carry
+        logf = jax.nn.log_sigmoid(f_pre[:, t])
+        m_new = jnp.maximum(logf + m, i_pre[:, t])
+        gdec = jnp.exp(logf + m - m_new)[:, None, None]
+        gsrc = jnp.exp(i_pre[:, t] - m_new)[:, None, None]
+        C = C * gdec + gsrc * (kf[:, t, :, None] * vf[:, t, None, :])
+        n = n * gdec[..., 0] + gsrc[..., 0] * kf[:, t]
+        num = jnp.einsum("bd,bde->be", qf[:, t], C)
+        den = jnp.einsum("bd,bd->b", qf[:, t], n)
+        y = num / jnp.maximum(jnp.abs(den), 1.0)[:, None]
+        return (C, n, m_new), y
+
+    C0 = jnp.zeros((BH, hd, hd), jnp.float32)
+    n0 = jnp.zeros((BH, hd), jnp.float32)
+    m0 = jnp.full((BH,), -1e30, jnp.float32)
+    _, ys = jax.lax.scan(step, (C0, n0, m0), jnp.arange(S))
+    return jnp.moveaxis(ys, 0, 1).astype(q.dtype)

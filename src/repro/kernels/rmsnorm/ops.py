@@ -1,0 +1,21 @@
+"""Jit'd wrapper: model-layout RMSNorm (any leading dims)."""
+
+from __future__ import annotations
+
+import jax
+
+from .kernel import rmsnorm_rows
+from .ref import rmsnorm_ref  # noqa: F401  (re-exported oracle)
+
+
+def _is_cpu() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+def rmsnorm(x, w, *, eps: float = 1e-5, interpret: bool | None = None):
+    """x: [..., d]; w: [d] → [..., d]."""
+    if interpret is None:
+        interpret = _is_cpu()
+    shape = x.shape
+    y = rmsnorm_rows(x.reshape(-1, shape[-1]), w, eps=eps, interpret=interpret)
+    return y.reshape(shape)

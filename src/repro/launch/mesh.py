@@ -1,0 +1,31 @@
+"""Production mesh construction.
+
+Single pod: 256 chips as ("data", "model") = (16, 16).
+Multi-pod:  512 chips as ("pod", "data", "model") = (2, 16, 16) — the "pod"
+axis is pure data parallelism across ICI-connected pods (gradient all-reduce
+crosses the pod axis once per step; everything else stays intra-pod).
+
+Defined as functions so importing this module never touches jax device state
+(the dry-run must set XLA_FLAGS before any jax initialization).
+"""
+
+from __future__ import annotations
+
+import jax
+from jax.sharding import Mesh
+
+__all__ = ["make_production_mesh", "make_host_mesh"]
+
+
+def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh() -> Mesh:
+    """1-device mesh for smoke tests / examples on CPU."""
+    n = len(jax.devices())
+    if n >= 2:
+        return jax.make_mesh((1, n), ("data", "model"))
+    return jax.make_mesh((1, 1), ("data", "model"))

@@ -1,0 +1,290 @@
+"""Roofline analysis from compiled artifacts (no real hardware).
+
+Parses the optimized (post-SPMD, scheduled) HLO text into a per-computation
+symbol table and derives, **with while-loop trip-count correction** (layer
+scans place one set of ops inside a while body — counting them once would
+undercount by n_layers):
+
+* ``flops``            — 2 · prod(out) · K for every dot, K resolved from the
+                         operand shapes + contracting dims;
+* ``bytes``            — HBM-traffic proxy: operand+output bytes of dots,
+                         convolutions, explicit data movement (copy, gather,
+                         scatter, dynamic-(update-)slice) and collectives.
+                         XLA:CPU fuses far less than XLA:TPU, so counting
+                         every elementwise line would overstate TPU traffic
+                         ~100×; on TPU the elementwise chains fuse into their
+                         matmul producers/consumers, making matmul-boundary
+                         traffic the dominant term (methodology note in
+                         EXPERIMENTS.md §Roofline);
+* ``collective bytes`` — operand sizes of all-gather / all-reduce /
+                         reduce-scatter / all-to-all / collective-permute,
+                         reconstructed from output shape × replica-group size.
+
+``compiled.cost_analysis()`` is recorded too, but XLA:CPU does not apply trip
+counts to while bodies, so the parsed numbers are the §Roofline source of
+truth (methodology note in EXPERIMENTS.md).
+
+Hardware constants (assignment): 197 TFLOP/s bf16 per chip; 819 GB/s HBM;
+~50 GB/s/link ICI.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import re
+from typing import Any, Dict, List, Optional, Tuple
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+ICI_BW = 50e9
+ICI_LINKS = 4.0  # v5e 2D torus: 4 links/chip
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f16": 2, "bf16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# ops whose operands/outputs count toward the HBM-traffic proxy.
+# "copy" is deliberately absent: XLA:CPU materializes while-carry copies that
+# XLA:TPU elides via buffer aliasing — including them would overstate TPU
+# traffic severalfold (verified on tinyllama train_4k: copies alone were ~65%
+# of all bytes).
+_BYTES_OPS = ("dot", "convolution", "dynamic-slice",
+              "dynamic-update-slice", "gather", "scatter") + _COLLECTIVES
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([\d,]*)\]")
+_HEADER_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*\(.*\{\s*$")
+_INSTR_RE = re.compile(
+    r"^\s+(?:ROOT\s+)?%?([\w\.\-]+)\s*=\s*(.*?)\s+([a-z][a-z0-9\-]*)\(")
+_OPERAND_RE = re.compile(r"%([\w\.\-]+)")
+_TRIP_RE = re.compile(r'"known_trip_count"\s*:\s*\{\s*"n"\s*:\s*"(\d+)"')
+
+
+def _shape_list(type_str: str) -> List[Tuple[str, List[int]]]:
+    return [(m.group(1), [int(d) for d in m.group(2).split(",") if d])
+            for m in _SHAPE_RE.finditer(type_str)]
+
+
+def _bytes_of(type_str: str) -> int:
+    total = 0
+    for dt, dims in _shape_list(type_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def _group_size(line: str, n_default: int = 1) -> int:
+    # explicit: replica_groups={{0,1,2,3},{...}}
+    m = re.search(r"replica_groups=\{\{([\d,]+)\}", line)
+    if m:
+        return len(m.group(1).split(","))
+    # iota: replica_groups=[G,S]<=[N] (each group has S members)
+    m = re.search(r"replica_groups=\[(\d+),(\d+)\]<=\[\d+", line)
+    if m:
+        return int(m.group(2))
+    return n_default
+
+
+@dataclasses.dataclass
+class HloStats:
+    flops: float = 0.0
+    bytes: float = 0.0
+    coll_bytes_by_kind: Dict[str, float] = dataclasses.field(default_factory=dict)
+    coll_count_by_kind: Dict[str, int] = dataclasses.field(default_factory=dict)
+
+    @property
+    def coll_bytes(self) -> float:
+        return sum(self.coll_bytes_by_kind.values())
+
+    def add(self, other: "HloStats", mult: float = 1.0,
+            include_bytes: bool = True) -> None:
+        self.flops += other.flops * mult
+        if include_bytes:
+            self.bytes += other.bytes * mult
+        for k, v in other.coll_bytes_by_kind.items():
+            self.coll_bytes_by_kind[k] = self.coll_bytes_by_kind.get(k, 0.0) + v * mult
+        for k, v in other.coll_count_by_kind.items():
+            self.coll_count_by_kind[k] = self.coll_count_by_kind.get(k, 0) + int(v * mult)
+
+
+class HloAnalyzer:
+    """Symbol-table HLO text analyzer with call-graph accumulation."""
+
+    def __init__(self, hlo: str):
+        self.comps: Dict[str, List[str]] = {}
+        self.entry: Optional[str] = None
+        cur: Optional[str] = None
+        for line in hlo.splitlines():
+            if not line.startswith((" ", "\t")):
+                m = _HEADER_RE.match(line)
+                if m:
+                    cur = m.group(1)
+                    self.comps[cur] = []
+                    if line.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+                cur = None
+                continue
+            if cur is not None and "=" in line:
+                self.comps[cur].append(line)
+        if self.entry is None and self.comps:
+            self.entry = list(self.comps)[-1]
+        self._memo: Dict[str, HloStats] = {}
+
+    # -- per-line helpers -----------------------------------------------------
+
+    def _symbols(self, comp: str) -> Dict[str, str]:
+        """instruction name → result type string (plus parameters)."""
+        table: Dict[str, str] = {}
+        for line in self.comps.get(comp, []):
+            m = _INSTR_RE.match(line)
+            if m:
+                table[m.group(1)] = m.group(2)
+        return table
+
+    def _dot_flops(self, line: str, table: Dict[str, str], out_type: str) -> float:
+        ops = _OPERAND_RE.findall(line.split("(", 1)[1])
+        if not ops:
+            return 0.0
+        lhs_t = table.get(ops[0])
+        if lhs_t is None:
+            return 0.0
+        lhs_shapes = _shape_list(lhs_t)
+        if not lhs_shapes:
+            return 0.0
+        lhs_dims = lhs_shapes[0][1]
+        m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+        if m and m.group(1):
+            k = 1
+            for d in m.group(1).split(","):
+                k *= lhs_dims[int(d)] if int(d) < len(lhs_dims) else 1
+        else:
+            k = lhs_dims[-1] if lhs_dims else 1
+        out = 1
+        for _, dims in _shape_list(out_type):
+            for d in dims:
+                out *= d
+            break
+        return 2.0 * out * k
+
+    def _line_stats(self, comp: str, line: str, table: Dict[str, str]) -> Tuple[
+            HloStats, Optional[Tuple[str, int, bool]]]:
+        st = HloStats()
+        call: Optional[Tuple[str, int, bool]] = None
+        m = _INSTR_RE.match(line)
+        if not m:
+            return st, call
+        _, out_type, opcode = m.groups()
+        out_b = _bytes_of(out_type)
+        in_b = 0
+        op_names = _OPERAND_RE.findall(line.split("(", 1)[1].split(")", 1)[0]) \
+            if "(" in line else []
+        for o in op_names:
+            t = table.get(o)
+            if t:
+                in_b += _bytes_of(t)
+        if opcode in _BYTES_OPS:
+            if opcode in ("dynamic-slice", "gather"):
+                # reads only the sliced region (≈ output), not the operand
+                st.bytes += 2 * out_b
+            elif opcode in ("dynamic-update-slice", "scatter"):
+                # reads + writes the update region only (in-place on TPU)
+                upd = table.get(op_names[1]) if len(op_names) > 1 else None
+                st.bytes += 2 * (_bytes_of(upd) if upd else out_b)
+            else:
+                st.bytes += out_b + in_b
+        if opcode == "dot":
+            st.flops += self._dot_flops(line, table, out_type)
+        if opcode in _COLLECTIVES:
+            g = _group_size(line)
+            if opcode == "all-gather":
+                b = out_b / max(g, 1)
+            elif opcode == "reduce-scatter":
+                b = out_b * g
+            else:  # all-reduce, all-to-all, collective-permute
+                b = out_b
+            st.coll_bytes_by_kind[opcode] = st.coll_bytes_by_kind.get(opcode, 0.0) + b
+            st.coll_count_by_kind[opcode] = st.coll_count_by_kind.get(opcode, 0) + 1
+        # call edges. Two kinds:
+        #  - "control" (while / call / conditional): the child is real code
+        #    executing from HBM-resident buffers → include its bytes.
+        #  - "apply" (fusion / reduce / map / ...): the child describes the
+        #    fused computation whose intermediates live in registers/VMEM →
+        #    include only its FLOPs (dots inside fusions) and collectives,
+        #    NOT its bytes; the call site's operand/output bytes already
+        #    account for the HBM traffic.
+        wm = re.search(r"\bwhile\(", line)
+        if wm:
+            cm = re.search(r"condition=%?([\w\.\-]+)\s*,\s*body=%?([\w\.\-]+)", line)
+            if cm:
+                trips = self._trip_count(line, cm.group(1))
+                call = (cm.group(2), trips, True)
+        else:
+            cm = re.search(r"\bcall\(.*?to_apply=%?([\w\.\-]+)", line)
+            if cm:
+                call = (cm.group(1), 1, True)
+            else:
+                cm = re.search(r"(?:calls|to_apply)=%?([\w\.\-]+)", line)
+                if cm and opcode in ("fusion", "call", "custom-call", "reduce",
+                                     "map", "sort", "scatter", "select-and-scatter"):
+                    call = (cm.group(1), 1, opcode == "call")
+        return st, call
+
+    def _trip_count(self, line: str, cond: str) -> int:
+        m = _TRIP_RE.search(line)
+        if m:
+            return int(m.group(1))
+        consts = []
+        for l in self.comps.get(cond, []):
+            for mm in re.finditer(r"constant\((\d+)\)", l):
+                consts.append(int(mm.group(1)))
+        return max(consts) if consts else 1
+
+    # -- accumulation ----------------------------------------------------------
+
+    def stats_of(self, comp: str, _stack: Tuple[str, ...] = ()) -> HloStats:
+        if comp in self._memo:
+            return self._memo[comp]
+        total = HloStats()
+        if comp in _stack or comp not in self.comps:
+            return total
+        table = self._symbols(comp)
+        for line in self.comps[comp]:
+            st, call = self._line_stats(comp, line, table)
+            total.add(st)
+            if call is not None:
+                child, mult, include_bytes = call
+                total.add(self.stats_of(child, _stack + (comp,)), mult,
+                          include_bytes=include_bytes)
+        self._memo[comp] = total
+        return total
+
+    def entry_stats(self) -> HloStats:
+        return self.stats_of(self.entry) if self.entry else HloStats()
+
+
+def analyze_hlo(hlo: str) -> HloStats:
+    return HloAnalyzer(hlo).entry_stats()
+
+
+def roofline_terms(flops_per_chip: float, bytes_per_chip: float,
+                   coll_bytes_per_chip: float):
+    """The three roofline times (seconds) for one step, per chip."""
+    return {
+        "t_compute": flops_per_chip / PEAK_FLOPS,
+        "t_memory": bytes_per_chip / HBM_BW,
+        "t_collective": coll_bytes_per_chip / (ICI_BW * ICI_LINKS),
+    }
+
+
+def dominant_term(terms: Dict[str, float]) -> str:
+    return max(("t_compute", "t_memory", "t_collective"), key=lambda k: terms[k])

@@ -1,0 +1,157 @@
+"""Step builders: jit-able train / prefill / decode steps with shardings.
+
+``build_cell`` returns everything the dry-run, trainer, and server need for
+one (arch × shape) cell: the step function, abstract arguments, and the
+in/out shardings resolved from the logical-axis annotations against a mesh.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, Callable, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..configs.base import ModelConfig, ShapeConfig
+from ..models import api
+from ..models.sharding import Rules, constrain, logical_to_spec, rules_for, shardings_for_tree
+from ..optim.adamw import AdamWConfig, adamw_init, adamw_update
+
+__all__ = ["CellSpec", "build_cell", "make_constrain"]
+
+
+def make_constrain(rules: Rules):
+    def c(x):
+        if x.ndim == 3:
+            return constrain(x, rules, "batch", "act_seq", None)
+        if x.ndim == 4:  # q/k/v [B, S, H, hd] inside attention
+            return constrain(x, rules, "batch", "act_seq", None, None)
+        return x
+    return c
+
+
+def _batch_sharding(mesh: Mesh, rules: Rules, tree):
+    def one(leaf):
+        if leaf.ndim == 0:
+            return NamedSharding(mesh, P())
+        spec = logical_to_spec(("batch",) + (None,) * (leaf.ndim - 1), rules,
+                               mesh, shape=tuple(leaf.shape))
+        return NamedSharding(mesh, spec)
+    return jax.tree.map(one, tree)
+
+
+def _replicated(mesh: Mesh, tree):
+    return jax.tree.map(lambda _: NamedSharding(mesh, P()), tree)
+
+
+@dataclasses.dataclass
+class CellSpec:
+    """One lowerable (arch × shape × mesh) cell."""
+
+    cfg: ModelConfig
+    shape: ShapeConfig
+    mesh: Mesh
+    fn: Callable            # the step function (donation-ready)
+    args: Tuple[Any, ...]   # abstract ShapeDtypeStruct arguments
+    in_shardings: Tuple[Any, ...]
+    out_shardings: Any
+    donate_argnums: Tuple[int, ...] = ()
+
+    def jitted(self):
+        return jax.jit(
+            self.fn,
+            in_shardings=self.in_shardings,
+            out_shardings=self.out_shardings,
+            donate_argnums=self.donate_argnums,
+        )
+
+    def lower(self):
+        with self.mesh:
+            return self.jitted().lower(*self.args)
+
+
+def build_cell(cfg: ModelConfig, shape: ShapeConfig, mesh: Mesh,
+               adamw: Optional[AdamWConfig] = None,
+               remat: bool = True) -> CellSpec:
+    rules = rules_for(cfg.family)
+    cons = make_constrain(rules)
+    max_seq = shape.seq_len
+
+    params_abs, logical = api.init_params(cfg, None, max_seq=max_seq)
+    params_sh = shardings_for_tree(logical, params_abs, rules, mesh)
+    specs = api.input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        adamw = adamw or AdamWConfig()
+        opt_abs = jax.eval_shape(adamw_init, params_abs)
+        opt_sh = {
+            "m": params_sh, "v": params_sh,
+            "step": NamedSharding(mesh, P()),
+        }
+        batch_abs = specs
+        batch_sh = _batch_sharding(mesh, rules, batch_abs)
+
+        def step(params, opt_state, batch):
+            def lf(p):
+                return api.loss(cfg, p, batch, constrain=cons, remat=remat)
+
+            (l, ce), grads = jax.value_and_grad(lf, has_aux=True)(params)
+            new_p, new_o, stats = adamw_update(adamw, params, grads, opt_state)
+            return new_p, new_o, {"loss": l, "ce": ce, **stats}
+
+        metrics_abs = {"loss": jax.ShapeDtypeStruct((), jnp.float32),
+                       "ce": jax.ShapeDtypeStruct((), jnp.float32),
+                       "grad_norm": jax.ShapeDtypeStruct((), jnp.float32),
+                       "lr": jax.ShapeDtypeStruct((), jnp.float32)}
+        return CellSpec(
+            cfg, shape, mesh, step,
+            args=(params_abs, opt_abs, batch_abs),
+            in_shardings=(params_sh, opt_sh, batch_sh),
+            out_shardings=(params_sh, opt_sh, _replicated(mesh, metrics_abs)),
+            donate_argnums=(0, 1),
+        )
+
+    if shape.kind == "prefill":
+        batch_abs = specs
+        batch_sh = _batch_sharding(mesh, rules, batch_abs)
+        cache_abs, cache_logical = api.cache_shape(cfg, shape.global_batch, max_seq)
+        cache_sh = shardings_for_tree(cache_logical, cache_abs, rules, mesh)
+        logits_sh = NamedSharding(
+            mesh, logical_to_spec(("batch", None, "vocab"), rules, mesh,
+                                  shape=(shape.global_batch, 1, cfg.vocab)))
+
+        def step(params, batch):
+            return api.prefill(cfg, params, batch, max_seq, constrain=cons)
+
+        return CellSpec(
+            cfg, shape, mesh, step,
+            args=(params_abs, batch_abs),
+            in_shardings=(params_sh, batch_sh),
+            out_shardings=(logits_sh, cache_sh),
+        )
+
+    if shape.kind == "decode":
+        cache_abs, cache_logical = api.cache_shape(cfg, shape.global_batch, max_seq)
+        cache_sh = shardings_for_tree(cache_logical, cache_abs, rules, mesh)
+        token_abs = specs["token"]
+        pos_abs = specs["pos"]
+        token_sh = _batch_sharding(mesh, rules, token_abs)
+        logits_sh = NamedSharding(
+            mesh, logical_to_spec(("batch", None, "vocab"), rules, mesh,
+                                  shape=(shape.global_batch, 1, cfg.vocab)))
+
+        def step(params, cache, token, pos):
+            return api.decode_step(cfg, params, cache, token, pos, constrain=cons)
+
+        return CellSpec(
+            cfg, shape, mesh, step,
+            args=(params_abs, cache_abs, token_abs, pos_abs),
+            in_shardings=(params_sh, cache_sh, token_sh, NamedSharding(mesh, P())),
+            out_shardings=(logits_sh, cache_sh),
+            donate_argnums=(1,),
+        )
+
+    raise ValueError(shape.kind)

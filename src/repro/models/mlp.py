@@ -1,0 +1,48 @@
+"""Feed-forward blocks: gated SwiGLU (llama family) and GELU (whisper)."""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, dense_init, zeros_init
+
+__all__ = ["init_swiglu", "swiglu", "init_gelu_mlp", "gelu_mlp"]
+
+
+def init_swiglu(cfg, kg, d_ff=None):
+    d = cfg.d_model
+    ff = d_ff or cfg.d_ff
+    p = {
+        "w1": dense_init(kg(), (d, ff)),   # gate
+        "w3": dense_init(kg(), (d, ff)),   # up
+        "w2": dense_init(kg(), (ff, d)),   # down
+    }
+    logical = {"w1": ("d_in", "feat"), "w3": ("d_in", "feat"), "w2": ("feat", "d_in")}
+    return p, logical
+
+
+def swiglu(p, x):
+    g = x @ p["w1"].astype(COMPUTE_DTYPE)
+    u = x @ p["w3"].astype(COMPUTE_DTYPE)
+    h = jax.nn.silu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * u
+    return h @ p["w2"].astype(COMPUTE_DTYPE)
+
+
+def init_gelu_mlp(cfg, kg):
+    d, ff = cfg.d_model, cfg.d_ff
+    p = {
+        "w1": dense_init(kg(), (d, ff)),
+        "b1": zeros_init(kg(), (ff,)),
+        "w2": dense_init(kg(), (ff, d)),
+        "b2": zeros_init(kg(), (d,)),
+    }
+    logical = {"w1": ("d_in", "feat"), "b1": ("feat",),
+               "w2": ("feat", "d_in"), "b2": ("none",)}
+    return p, logical
+
+
+def gelu_mlp(p, x):
+    h = x @ p["w1"].astype(COMPUTE_DTYPE) + p["b1"].astype(COMPUTE_DTYPE)
+    h = jax.nn.gelu(h.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return h @ p["w2"].astype(COMPUTE_DTYPE) + p["b2"].astype(COMPUTE_DTYPE)

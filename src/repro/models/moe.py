@@ -1,0 +1,96 @@
+"""Mixture-of-Experts: GShard/Switch-style top-k dispatch with capacity.
+
+Expert parallelism: expert-stacked weights [E, d, ff] are sharded on E over
+the "model" mesh axis; the dispatch/combine einsums move tokens between the
+token layout (batch-sharded) and the expert layout (expert-sharded), which
+GSPMD lowers to all-to-alls — the canonical TPU MoE pattern.
+
+Tokens are processed in fixed groups (``group_size``) so the dispatch one-hot
+stays small: [groups, group, E, C] with C = ceil(top_k · group · cf / E).
+Overflowing tokens are dropped (contribute zero), standard for
+capacity-factor routing; the router's softmax weights are renormalized over
+the selected experts (Phi/Mixtral convention).
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import COMPUTE_DTYPE, dense_init
+
+__all__ = ["init_moe", "moe_block", "moe_capacity"]
+
+
+def init_moe(cfg, kg):
+    m = cfg.moe
+    d, ff, E = cfg.d_model, m.d_ff_expert, m.n_experts
+    p = {
+        "router": dense_init(kg(), (d, E)),
+        "w1": dense_init(kg(), (E, d, ff)),
+        "w3": dense_init(kg(), (E, d, ff)),
+        "w2": dense_init(kg(), (E, ff, d)),
+    }
+    logical = {
+        "router": ("d_in", "none"),
+        # EP: experts take the "model" axis; the expert-internal dims keep
+        # only FSDP ("data") — sharding ff over "model" too would double-map
+        # the axis.
+        "w1": ("experts", "d_in", None),
+        "w3": ("experts", "d_in", None),
+        "w2": ("experts", None, "d_in"),
+    }
+    return p, logical
+
+
+def moe_capacity(m, group: int) -> int:
+    c = int(np.ceil(m.top_k * group * m.capacity_factor / m.n_experts))
+    return max(c, 4)
+
+
+def moe_block(cfg, p, x, group_size: int = 1024):
+    """x: [B, S, d] → [B, S, d]."""
+    m = cfg.moe
+    B, S, d = x.shape
+    E, k = m.n_experts, m.top_k
+    group = min(group_size, S)
+    assert (B * S) % group == 0
+    G = B * S // group
+    C = moe_capacity(m, group)
+
+    xg = x.reshape(G, group, d)
+    logits = (xg @ p["router"].astype(COMPUTE_DTYPE)).astype(jnp.float32)  # [G,t,E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, sel = jax.lax.top_k(probs, k)                       # [G,t,k]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+
+    sel_oh = jax.nn.one_hot(sel, E, dtype=jnp.float32)        # [G,t,k,E]
+    # position of each (token, choice) within its expert queue, k-major then t
+    flat = sel_oh.reshape(G, group * k, E)
+    pos = jnp.cumsum(flat, axis=1) - flat                      # [G,t*k,E]
+    pos = pos.reshape(G, group, k, E)
+    in_cap = (pos < C).astype(jnp.float32)
+    pos_oh = jax.nn.one_hot(pos.astype(jnp.int32), C, dtype=jnp.float32)  # [G,t,k,E,C]
+
+    dispatch = jnp.einsum("gtke,gtkec->gtec", sel_oh * in_cap, pos_oh)
+    combine = jnp.einsum("gtk,gtke,gtkec->gtec", gate, sel_oh * in_cap, pos_oh)
+
+    # token layout → expert layout (all-to-all under EP)
+    xe = jnp.einsum("gtec,gtd->egcd", dispatch.astype(COMPUTE_DTYPE), xg)
+    h1 = jnp.einsum("egcd,edf->egcf", xe, p["w1"].astype(COMPUTE_DTYPE))
+    h3 = jnp.einsum("egcd,edf->egcf", xe, p["w3"].astype(COMPUTE_DTYPE))
+    h = jax.nn.silu(h1.astype(jnp.float32)).astype(COMPUTE_DTYPE) * h3
+    ye = jnp.einsum("egcf,efd->egcd", h, p["w2"].astype(COMPUTE_DTYPE))
+    # expert layout → token layout
+    y = jnp.einsum("gtec,egcd->gtd", combine.astype(COMPUTE_DTYPE), ye)
+    return y.reshape(B, S, d), _load_balance_loss(probs, sel_oh)
+
+
+def _load_balance_loss(probs, sel_oh):
+    """Switch-style auxiliary loss (mean prob · mean assignment per expert)."""
+    me = probs.mean(axis=(0, 1))            # [E]
+    ce = sel_oh.sum(axis=2).mean(axis=(0, 1))  # [E]
+    return probs.shape[-1] * jnp.sum(me * ce)

@@ -1,0 +1,392 @@
+"""Recurrent / hybrid LM assemblies: xLSTM (ssm family) and Zamba2 (hybrid).
+
+xLSTM-1.3b: blocks in groups of ``slstm_every`` — (slstm_every − 1) mLSTM
+blocks followed by 1 sLSTM block — scanned over groups with an inner scan
+over the stacked mLSTM blocks.
+
+Zamba2-7b: ``attn_every`` Mamba2 blocks per group followed by one application
+of the SHARED attention+MLP block (one parameter set, reused every group,
+concat([hidden, embedding]) input per the Zamba papers), plus remainder
+Mamba2 blocks. 81 = 13·6 + 3 for the full config.
+
+Sharding profile "ssm" (models/sharding.py): sequence local, batch over
+("pod","data"), cell feature dims over "model".
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attention, decode_attention
+from .common import COMPUTE_DTYPE, KeyGen, dense_init, ones_init, rmsnorm, softmax_cross_entropy
+from .mlp import init_swiglu, swiglu
+from .ssm import (init_mamba, mamba_chunked, mamba_decode_step, mamba_init_state)
+from .transformer import _probe, stack_init
+from .xlstm import (init_mlstm, init_slstm, mlstm_chunked, mlstm_decode_step,
+                    mlstm_init_state, slstm_decode_step, slstm_init_state, slstm_seq)
+
+__all__ = [
+    "init_xlstm_lm", "xlstm_forward", "xlstm_loss", "xlstm_prefill",
+    "xlstm_decode_step", "xlstm_cache_shape",
+    "init_zamba_lm", "zamba_forward", "zamba_loss", "zamba_prefill",
+    "zamba_decode_step", "zamba_cache_shape",
+]
+
+
+# ---------------------------------------------------------------------------
+# xLSTM
+# ---------------------------------------------------------------------------
+
+
+def _xlstm_groups(cfg) -> Tuple[int, int]:
+    per = cfg.slstm_every
+    assert cfg.n_layers % per == 0
+    return cfg.n_layers // per, per - 1  # (n_groups, mlstm per group)
+
+
+def init_xlstm_lm(cfg, key=None):
+    kg = KeyGen(key) if key is not None else _probe()
+    p: Dict[str, Any] = {
+        "embed": dense_init(kg() if key is not None else None, (cfg.vocab, cfg.d_model)),
+        "final_norm": ones_init(kg() if key is not None else None, (cfg.d_model,)),
+        "head": dense_init(kg() if key is not None else None, (cfg.d_model, cfg.vocab)),
+    }
+    l: Dict[str, Any] = {"embed": ("vocab", "d_in"), "final_norm": ("none",),
+                         "head": ("d_in", "vocab")}
+    n_groups, n_m = _xlstm_groups(cfg)
+
+    def init_group(kg2):
+        def init_mblock(kg3):
+            mp, ml = init_mlstm(cfg, kg3)
+            return ({"cell": mp, "ln": ones_init(kg3(), (cfg.d_model,))},
+                    {"cell": ml, "ln": ("none",)})
+
+        mp, ml = stack_init(n_m, init_mblock,
+                            kg2() if not isinstance(kg2, _probe) else None)
+        sp, sl = init_slstm(cfg, kg2)
+        return ({"m": mp, "s": sp, "s_ln": ones_init(kg2(), (cfg.d_model,))},
+                {"m": ml, "s": sl, "s_ln": ("none",)})
+
+    lkey = None if key is None else kg()
+    p["groups"], l["groups"] = stack_init(n_groups, init_group, lkey)
+    return p, l
+
+
+def _xlstm_stack(cfg, params, x, constrain, remat, states=None, collect=False,
+                 single_step=False):
+    """Shared group-scan driver. states: optional cache pytree to thread."""
+    n_groups, n_m = _xlstm_groups(cfg)
+    mstep = mlstm_decode_step if single_step else mlstm_chunked
+    sstep = slstm_decode_step if single_step else slstm_seq
+
+    def mblock(x, mp, st):
+        y, st2 = mstep(cfg, mp["cell"], rmsnorm(x, mp["ln"], cfg.norm_eps), st)
+        return constrain(x + y), st2
+
+    def group_body(carry, gin):
+        x = carry
+        gp, gst = gin
+
+        def inner(x, lin):
+            mp, st = lin
+            x, st2 = mblock(x, mp, st)
+            return x, st2
+
+        inner_fn = jax.checkpoint(inner, policy=jax.checkpoint_policies.nothing_saveable) \
+            if remat else inner
+        x, mstates = jax.lax.scan(inner_fn, x, (gp["m"], gst["m"]))
+        y, sstate = sstep(cfg, gp["s"], rmsnorm(x, gp["s_ln"], cfg.norm_eps),
+                          gst["s"])
+        x = constrain(x + y)
+        return x, {"m": mstates, "s": sstate}
+
+    if states is None:
+        B = x.shape[0]
+        m0 = mlstm_init_state(cfg, B)
+        s0 = slstm_init_state(cfg, B)
+        states = {
+            "m": jax.tree.map(lambda a: jnp.broadcast_to(a, (n_groups, n_m, *a.shape)), m0),
+            "s": jax.tree.map(lambda a: jnp.broadcast_to(a, (n_groups, *a.shape)), s0),
+        }
+    x, new_states = jax.lax.scan(group_body, x, (params["groups"], states))
+    return x, new_states
+
+
+def xlstm_forward(cfg, params, tokens, constrain=lambda x: x, remat=True,
+                  states=None, single_step=False):
+    x = constrain(jnp.take(params["embed"].astype(COMPUTE_DTYPE), tokens, axis=0))
+    x, new_states = _xlstm_stack(cfg, params, x, constrain, remat, states,
+                                 single_step=single_step)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["head"].astype(COMPUTE_DTYPE), new_states
+
+
+def xlstm_loss(cfg, params, tokens, labels, constrain=lambda x: x, remat=True):
+    logits, _ = xlstm_forward(cfg, params, tokens, constrain, remat)
+    ce = softmax_cross_entropy(logits, labels)
+    return ce, ce
+
+
+def xlstm_cache_shape(cfg, batch: int, max_seq: int):
+    """Recurrent state 'cache' — O(1) in sequence length (the 500k story)."""
+    n_groups, n_m = _xlstm_groups(cfg)
+    m0 = mlstm_init_state(cfg, batch)
+    s0 = slstm_init_state(cfg, batch)
+    tree = {
+        "m": jax.tree.map(lambda a: jax.ShapeDtypeStruct((n_groups, n_m, *a.shape),
+                                                         a.dtype), m0),
+        "s": jax.tree.map(lambda a: jax.ShapeDtypeStruct((n_groups, *a.shape),
+                                                         a.dtype), s0),
+    }
+    mlog = {"C": ("layers", "none", "batch", "none", "feat", "none"),
+            "n": ("layers", "none", "batch", "none", "feat"),
+            "m": ("layers", "none", "batch", "none")}
+    slog = {k: ("layers", "batch", "none", "none") for k in ("c", "n", "h", "m")}
+    return tree, {"m": mlog, "s": slog}
+
+
+def xlstm_prefill(cfg, params, tokens, max_seq: int, constrain=lambda x: x):
+    logits, states = xlstm_forward(cfg, params, tokens, constrain, remat=False)
+    return logits[:, -1:, :], states
+
+
+def xlstm_decode_step(cfg, params, cache, token, pos, constrain=lambda x: x):
+    del pos  # recurrent state carries position implicitly
+    logits, states = xlstm_forward(cfg, params, token, constrain, remat=False,
+                                   states=cache, single_step=True)
+    return logits, states
+
+
+# ---------------------------------------------------------------------------
+# Zamba2
+# ---------------------------------------------------------------------------
+
+
+def _zamba_groups(cfg) -> Tuple[int, int]:
+    n_groups = cfg.n_layers // cfg.attn_every
+    rem = cfg.n_layers - n_groups * cfg.attn_every
+    return n_groups, rem
+
+
+def _init_shared_attn(cfg, kg):
+    """Shared attention block: input concat([h, e]) ∈ R^{2d} (Zamba)."""
+    d, hd = cfg.d_model, cfg.hd
+    nq, nkv = cfg.n_heads * hd, cfg.n_kv_heads * hd
+    p = {
+        "wq": dense_init(kg(), (2 * d, nq)),
+        "wk": dense_init(kg(), (2 * d, nkv)),
+        "wv": dense_init(kg(), (2 * d, nkv)),
+        "wo": dense_init(kg(), (nq, d)),
+        "ln": ones_init(kg(), (2 * d,)),
+        "mlp_ln": ones_init(kg(), (cfg.d_model,)),
+    }
+    l = {"wq": ("d_in", "feat"), "wk": ("d_in", "feat"), "wv": ("d_in", "feat"),
+         "wo": ("feat", "d_in"), "ln": ("none",), "mlp_ln": ("none",)}
+    mlp_p, mlp_l = init_swiglu(cfg, kg)
+    p["mlp"], l["mlp"] = mlp_p, mlp_l
+    return p, l
+
+
+def init_zamba_lm(cfg, key=None):
+    kg = KeyGen(key) if key is not None else _probe()
+    p: Dict[str, Any] = {
+        "embed": dense_init(kg() if key is not None else None, (cfg.vocab, cfg.d_model)),
+        "final_norm": ones_init(kg() if key is not None else None, (cfg.d_model,)),
+        "head": dense_init(kg() if key is not None else None, (cfg.d_model, cfg.vocab)),
+    }
+    l: Dict[str, Any] = {"embed": ("vocab", "d_in"), "final_norm": ("none",),
+                         "head": ("d_in", "vocab")}
+    n_groups, rem = _zamba_groups(cfg)
+
+    def init_mblock(kg2):
+        mp, ml = init_mamba(cfg, kg2)
+        return ({"cell": mp, "ln": ones_init(kg2(), (cfg.d_model,))},
+                {"cell": ml, "ln": ("none",)})
+
+    def init_group(kg2):
+        mp, ml = stack_init(cfg.attn_every, init_mblock,
+                            kg2() if not isinstance(kg2, _probe) else None)
+        return {"mamba": mp}, {"mamba": ml}
+
+    lkey = None if key is None else kg()
+    p["groups"], l["groups"] = stack_init(n_groups, init_group, lkey)
+    if rem:
+        rkey = None if key is None else kg()
+        p["tail"], l["tail"] = stack_init(rem, init_mblock, rkey)
+    p["shared"], l["shared"] = _init_shared_attn(cfg, kg)
+    return p, l
+
+
+def _shared_attn_apply(cfg, sp, x, e0, constrain, kv_cache=None, pos=None):
+    """One application of the shared attention + MLP block."""
+    cat = jnp.concatenate([x, e0], axis=-1)
+    cat = rmsnorm(cat, sp["ln"], cfg.norm_eps)
+    if kv_cache is None:
+        # The hybrid profile keeps sequences device-local for the Mamba
+        # recurrence, but THIS block is full attention: without sequence
+        # sharding its f32 score blocks are [B_local, S, H, blk] —
+        # 8.6 GB/device per KV block on prefill_32k (§Perf #3). Shard q/k/v
+        # along seq over whatever mesh axes the batch left free.
+        from .sharding import constrain as _constrain, rules_for as _rules_for
+
+        _r = _rules_for("hybrid")
+
+        def _c4(a):
+            if a.ndim == 4:
+                return _constrain(a, _r, "batch", "kv_seq", None, None)
+            return a
+
+        positions = jnp.arange(x.shape[1])[None, :]
+        a, kv = attention(cfg, sp, cat, positions=positions, constrain=_c4)
+        out_cache = kv
+    else:
+        ck, cv = kv_cache
+        a, ck, cv = decode_attention(cfg, sp, cat, ck, cv, pos)
+        out_cache = (ck, cv)
+    x = constrain(x + a)
+    h = rmsnorm(x, sp["mlp_ln"], cfg.norm_eps)
+    x = constrain(x + swiglu(sp["mlp"], h))
+    return x, out_cache
+
+
+def _zamba_stack(cfg, params, x, constrain, remat, states=None, collect=False,
+                 single_step=False, attn_caches=None, pos=None):
+    n_groups, rem = _zamba_groups(cfg)
+    mstep = mamba_decode_step if single_step else mamba_chunked
+    e0 = x  # original embedding, concat-input to the shared block
+
+    def mblock(x, mp, st):
+        y, st2 = mstep(cfg, mp["cell"], rmsnorm(x, mp["ln"], cfg.norm_eps), st)
+        return constrain(x + y), st2
+
+    def inner(x, lin):
+        mp, st = lin
+        x, st2 = mblock(x, mp, st)
+        return x, st2
+
+    inner_fn = jax.checkpoint(inner, policy=jax.checkpoint_policies.nothing_saveable) \
+        if remat else inner
+
+    if states is None:
+        B = x.shape[0]
+        m0 = mamba_init_state(cfg, B)
+        states = {
+            "groups": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (n_groups, cfg.attn_every, *a.shape)), m0),
+            "tail": jax.tree.map(
+                lambda a: jnp.broadcast_to(a, (rem, *a.shape)), m0) if rem else None,
+        }
+
+    def group_body(x, gin):
+        gp, gst, gkv = gin
+        x, mstates = jax.lax.scan(inner_fn, x, (gp["mamba"], gst))
+        x, kv_out = _shared_attn_apply(cfg, params["shared"], x, e0, constrain,
+                                       kv_cache=gkv, pos=pos)
+        return x, (mstates, kv_out)
+
+    gkv_in = attn_caches if attn_caches is not None else (
+        None if single_step else _no_cache_marker(n_groups))
+    if attn_caches is not None:
+        x, (g_states, kv_outs) = jax.lax.scan(
+            group_body, x, (params["groups"], states["groups"], attn_caches))
+    else:
+        # the shared attention block is rematerialized too — without this the
+        # 13 applications' softmax intermediates dominate training memory
+        # (observed 136 GB/device on zamba2-7b train_4k before the fix)
+        def shared_apply(x_in, e_in):
+            y, kv_out = _shared_attn_apply(cfg, params["shared"], x_in, e_in,
+                                           constrain)
+            return y, kv_out
+
+        if remat:
+            shared_apply = jax.checkpoint(
+                shared_apply, policy=jax.checkpoint_policies.nothing_saveable)
+
+        def group_body_nocache(x, gin):
+            gp, gst = gin
+            x, mstates = jax.lax.scan(inner_fn, x, (gp["mamba"], gst))
+            x, kv_out = shared_apply(x, e0)
+            return x, (mstates, kv_out)
+
+        x, (g_states, kv_outs) = jax.lax.scan(
+            group_body_nocache, x, (params["groups"], states["groups"]))
+
+    tail_states = None
+    if rem:
+        x, tail_states = jax.lax.scan(inner_fn, x, (params["tail"], states["tail"]))
+    return x, {"groups": g_states, "tail": tail_states}, kv_outs
+
+
+def _no_cache_marker(n):
+    return None
+
+
+def zamba_forward(cfg, params, tokens, constrain=lambda x: x, remat=True):
+    x = constrain(jnp.take(params["embed"].astype(COMPUTE_DTYPE), tokens, axis=0))
+    x, _, _ = _zamba_stack(cfg, params, x, constrain, remat)
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    return x @ params["head"].astype(COMPUTE_DTYPE)
+
+
+def zamba_loss(cfg, params, tokens, labels, constrain=lambda x: x, remat=True):
+    logits = zamba_forward(cfg, params, tokens, constrain, remat)
+    ce = softmax_cross_entropy(logits, labels)
+    return ce, ce
+
+
+def zamba_cache_shape(cfg, batch: int, max_seq: int):
+    n_groups, rem = _zamba_groups(cfg)
+    m0 = mamba_init_state(cfg, batch)
+    hd, KV = cfg.hd, cfg.n_kv_heads
+    kv = jax.ShapeDtypeStruct((n_groups, batch, max_seq, KV, hd), COMPUTE_DTYPE)
+    tree = {
+        "groups": jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((n_groups, cfg.attn_every, *a.shape),
+                                           a.dtype), m0),
+        "tail": (jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct((rem, *a.shape), a.dtype), m0)
+            if rem else None),
+        "attn_k": kv, "attn_v": kv,
+    }
+    mlog = {"ssm": ("layers", "none", "batch", "feat", "none", "none"),
+            "conv": ("layers", "none", "batch", "none", "feat")}
+    tlog = {"ssm": ("layers", "batch", "feat", "none", "none"),
+            "conv": ("layers", "batch", "none", "feat")} if rem else None
+    logical = {"groups": mlog, "tail": tlog,
+               "attn_k": ("layers", "batch", "kv_seq", "none", "none"),
+               "attn_v": ("layers", "batch", "kv_seq", "none", "none")}
+    return tree, logical
+
+
+def zamba_prefill(cfg, params, tokens, max_seq: int, constrain=lambda x: x):
+    x = constrain(jnp.take(params["embed"].astype(COMPUTE_DTYPE), tokens, axis=0))
+    x, states, kv_outs = _zamba_stack(cfg, params, x, constrain, remat=False)
+    k, v = kv_outs  # [n_groups, B, S, KV, hd]
+
+    def pad(kv):
+        w = [(0, 0)] * kv.ndim
+        w[2] = (0, max_seq - kv.shape[2])
+        return jnp.pad(kv, w)
+
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"].astype(COMPUTE_DTYPE)
+    cache = {"groups": states["groups"], "tail": states["tail"],
+             "attn_k": pad(k.astype(COMPUTE_DTYPE)),
+             "attn_v": pad(v.astype(COMPUTE_DTYPE))}
+    return logits[:, -1:, :], cache
+
+
+def zamba_decode_step(cfg, params, cache, token, pos, constrain=lambda x: x):
+    x = constrain(jnp.take(params["embed"].astype(COMPUTE_DTYPE), token, axis=0))
+    states = {"groups": cache["groups"], "tail": cache["tail"]}
+    x, new_states, kv_outs = _zamba_stack(
+        cfg, params, x, constrain, remat=False, states=states,
+        single_step=True, attn_caches=(cache["attn_k"], cache["attn_v"]), pos=pos)
+    k2, v2 = kv_outs
+    x = rmsnorm(x, params["final_norm"], cfg.norm_eps)
+    logits = x @ params["head"].astype(COMPUTE_DTYPE)
+    return logits, dict(cache, groups=new_states["groups"], tail=new_states["tail"],
+                        attn_k=k2, attn_v=v2)

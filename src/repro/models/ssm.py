@@ -1,0 +1,188 @@
+"""Mamba2 (SSD) block — chunked selective-state-space compute (zamba2).
+
+Train/prefill use the chunkwise SSD form: within a chunk (length ``CHUNK``)
+the recurrence is evaluated as a masked quadratic form; across chunks the
+state [B, H, P, N] is carried by a ``lax.scan``. Decode is the single-step
+recurrence. Both paths share the same discretization, so decode extends
+prefill bit-consistently (tested against a pure sequential scan oracle in
+tests/test_models_smoke.py).
+
+TPU adaptation notes (DESIGN.md §2): heads shard over "model"
+(H = expand·d/headdim is a multiple of 16 for zamba2-7b: 112), sequence stays
+local to a device (the inter-chunk recurrence is sequential), batch shards
+over ("pod","data").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, dense_init, ones_init, zeros_init
+
+__all__ = ["init_mamba", "mamba_chunked", "mamba_decode_step", "mamba_init_state",
+           "CHUNK"]
+
+CHUNK = 128
+CONV_K = 4  # causal depthwise conv window
+
+
+def _dims(cfg):
+    d_in = cfg.ssm_expand * cfg.d_model
+    P = cfg.ssm_headdim
+    H = d_in // P
+    N = cfg.ssm_state
+    return d_in, H, P, N
+
+
+def init_mamba(cfg, kg):
+    d = cfg.d_model
+    d_in, H, P, N = _dims(cfg)
+    p = {
+        "in_proj": dense_init(kg(), (d, 2 * d_in + 2 * N + H)),  # z, x, B, C, dt
+        "conv_w": dense_init(kg(), (CONV_K, d_in + 2 * N), scale=0.5),
+        "A_log": zeros_init(kg(), (H,)),
+        "dt_bias": zeros_init(kg(), (H,)),
+        "D": ones_init(kg(), (H,)),
+        "out_proj": dense_init(kg(), (d_in, d)),
+    }
+    logical = {
+        "in_proj": ("d_in", "feat"),
+        "conv_w": ("none", "feat"),
+        "A_log": ("none",),
+        "dt_bias": ("none",),
+        "D": ("none",),
+        "out_proj": ("feat", "d_in"),
+    }
+    return p, logical
+
+
+def _split_proj(cfg, p, x):
+    d_in, H, P, N = _dims(cfg)
+    zxbcdt = x @ p["in_proj"].astype(COMPUTE_DTYPE)
+    z, xbc, dt = jnp.split(zxbcdt, [d_in, 2 * d_in + 2 * N], axis=-1)
+    return z, xbc, dt
+
+
+def _discretize(p, dt):
+    """dt [..., H] → (log decay per step [..., H], effective dt [..., H])."""
+    dt_eff = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(p["A_log"].astype(jnp.float32))  # [H], negative
+    return A * dt_eff, dt_eff  # log-decay = A·dt  (≤ 0)
+
+
+def _conv(p, xbc, conv_state=None):
+    """Causal depthwise conv over seq. xbc: [B, S, d_in + 2N].
+
+    conv_state (decode): [B, CONV_K-1, d_in+2N] trailing context.
+    Returns (out, new_conv_state).
+    """
+    w = p["conv_w"].astype(COMPUTE_DTYPE)  # [K, F]
+    if conv_state is None:
+        pad = jnp.zeros((xbc.shape[0], CONV_K - 1, xbc.shape[2]), xbc.dtype)
+    else:
+        pad = conv_state.astype(xbc.dtype)
+    xp = jnp.concatenate([pad, xbc], axis=1)  # [B, S+K-1, F]
+    out = sum(xp[:, i : i + xbc.shape[1], :] * w[i] for i in range(CONV_K))
+    new_state = xp[:, -(CONV_K - 1) :, :]
+    return jax.nn.silu(out.astype(jnp.float32)).astype(COMPUTE_DTYPE), new_state
+
+
+def mamba_init_state(cfg, batch, dtype=jnp.float32):
+    d_in, H, P, N = _dims(cfg)
+    return {
+        "ssm": jnp.zeros((batch, H, P, N), dtype),
+        "conv": jnp.zeros((batch, CONV_K - 1, d_in + 2 * N), dtype),
+    }
+
+
+def mamba_chunked(cfg, p, x, state=None):
+    """x: [B, S, d], S % CHUNK == 0. Returns (y [B,S,d], final_state)."""
+    d_in, H, P, N = _dims(cfg)
+    B, S, d = x.shape
+    L = min(CHUNK, S)
+    nc = S // L
+    assert S % L == 0
+
+    z, xbc, dt = _split_proj(cfg, p, x)
+    conv_in_state = None if state is None else state["conv"]
+    xbc, conv_state = _conv(p, xbc, conv_in_state)
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(B, S, H, P)
+    logdec, dt_eff = _discretize(p, dt)  # [B,S,H]
+
+    # chunk views
+    xc = xh.reshape(B, nc, L, H, P)
+    Bc = Bmat.reshape(B, nc, L, N).astype(jnp.float32)
+    Cc = Cmat.reshape(B, nc, L, N).astype(jnp.float32)
+    ld = logdec.reshape(B, nc, L, H)
+    dtc = dt_eff.reshape(B, nc, L, H)
+
+    cum = jnp.cumsum(ld, axis=2)                     # [B,nc,L,H] inclusive
+    seg = cum[:, :, :, None, :] - cum[:, :, None, :, :]  # [B,nc,Li,Lj,H]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    seg = jnp.where(causal[None, None, :, :, None], seg, -jnp.inf)
+    decay_ij = jnp.exp(seg)                          # [B,nc,Li,Lj,H]
+
+    cb = jnp.einsum("bcin,bcjn->bcij", Cc, Bc)       # [B,nc,Li,Lj]
+    scores = cb[..., None] * decay_ij * dtc[:, :, None, :, :]  # [B,nc,Li,Lj,H]
+    y_intra = jnp.einsum("bcijh,bcjhp->bcihp",
+                         scores.astype(COMPUTE_DTYPE), xc)
+
+    # inter-chunk: state recurrence
+    decay_to_end = jnp.exp(cum[:, :, -1:, :] - cum)  # [B,nc,L,H]
+    # per-chunk state contribution: sum_j decay_to_end_j dt_j B_j ⊗ x_j
+    contrib = jnp.einsum("bclh,bclh,bcln,bclhp->bchpn",
+                         decay_to_end.astype(jnp.float32),
+                         dtc.astype(jnp.float32),
+                         Bc, xc.astype(jnp.float32))
+    chunk_decay = jnp.exp(cum[:, :, -1, :])          # [B,nc,H]
+
+    s0 = (jnp.zeros((B, H, P, N), jnp.float32) if state is None
+          else state["ssm"].astype(jnp.float32))
+
+    def step(s, inp):
+        dec, con = inp  # [B,H], [B,H,P,N]
+        s_out = s  # state BEFORE this chunk (used by y_inter)
+        s_new = s * dec[:, :, None, None] + con
+        return s_new, s_out
+
+    dec_t = jnp.moveaxis(chunk_decay, 1, 0)
+    con_t = jnp.moveaxis(contrib, 1, 0)
+    s_final, s_before = jax.lax.scan(step, s0, (dec_t, con_t))
+    s_before = jnp.moveaxis(s_before, 0, 1)          # [B,nc,H,P,N]
+
+    decay_in = jnp.exp(cum)                          # [B,nc,L,H]
+    y_inter = jnp.einsum("bcln,bclh,bchpn->bclhp",
+                         Cc, decay_in.astype(jnp.float32), s_before)
+
+    y = (y_intra.astype(jnp.float32) + y_inter
+         + xh.reshape(B, nc, L, H, P).astype(jnp.float32)
+         * p["D"].astype(jnp.float32)[None, None, None, :, None])
+    y = y.reshape(B, S, d_in).astype(COMPUTE_DTYPE)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    out = y @ p["out_proj"].astype(COMPUTE_DTYPE)
+    return out, {"ssm": s_final, "conv": conv_state}
+
+
+def mamba_decode_step(cfg, p, x, state):
+    """x: [B, 1, d]; single-step recurrence. Returns (y [B,1,d], state)."""
+    d_in, H, P, N = _dims(cfg)
+    B = x.shape[0]
+    z, xbc, dt = _split_proj(cfg, p, x)
+    xbc, conv_state = _conv(p, xbc, state["conv"])
+    xs, Bmat, Cmat = jnp.split(xbc, [d_in, d_in + N], axis=-1)
+    xh = xs.reshape(B, H, P)
+    logdec, dt_eff = _discretize(p, dt[:, 0, :])     # [B,H]
+    dec = jnp.exp(logdec)
+    s = state["ssm"].astype(jnp.float32)
+    s = (s * dec[:, :, None, None]
+         + jnp.einsum("bh,bn,bhp->bhpn", dt_eff, Bmat[:, 0].astype(jnp.float32),
+                      xh.astype(jnp.float32)))
+    y = jnp.einsum("bn,bhpn->bhp", Cmat[:, 0].astype(jnp.float32), s)
+    y = y + xh.astype(jnp.float32) * p["D"].astype(jnp.float32)[None, :, None]
+    y = y.reshape(B, 1, d_in).astype(COMPUTE_DTYPE)
+    y = y * jax.nn.silu(z.astype(jnp.float32)).astype(COMPUTE_DTYPE)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), {"ssm": s, "conv": conv_state}

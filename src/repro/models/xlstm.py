@@ -1,0 +1,299 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunked linear attention) and sLSTM
+(scalar memory, strictly sequential recurrence).
+
+mLSTM train/prefill uses a chunkwise-parallel form with carried
+(C, n, m) state — matrix memory C [B,H,hd,hd], normalizer n [B,H,hd], and the
+log-space stabilizer m [B,H] from the xLSTM paper (exp input gate + sigmoid
+forget gate, stabilized by the running max). Decode is the single-step
+recurrence; the two paths agree bit-consistently up to bf16 rounding
+(tested against a step-by-step oracle).
+
+sLSTM has no parallel form (the hidden state feeds back into the gates); it
+is a ``lax.scan`` over time — one of the paper's "inherently sequential"
+tasks, which is why xlstm-1.3b interleaves it only every 8th block.
+
+TPU adaptation (DESIGN.md): hd=512 matrix memory shards its first dim over
+"model" (512 % 16 == 0 for the full config); sequence stays local; batch
+shards over ("pod","data").
+"""
+
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .common import COMPUTE_DTYPE, dense_init, ones_init, rmsnorm, zeros_init
+
+__all__ = [
+    "init_mlstm",
+    "mlstm_chunked",
+    "mlstm_decode_step",
+    "mlstm_init_state",
+    "init_slstm",
+    "slstm_seq",
+    "slstm_decode_step",
+    "slstm_init_state",
+    "MLSTM_CHUNK",
+]
+
+MLSTM_CHUNK = 128
+
+
+def _mdims(cfg):
+    H = cfg.n_heads
+    d_in = 2 * cfg.d_model          # up-projection factor 2 (xLSTM block)
+    hd = d_in // H
+    return d_in, H, hd
+
+
+# ---------------------------------------------------------------------------
+# mLSTM
+# ---------------------------------------------------------------------------
+
+
+def init_mlstm(cfg, kg):
+    d = cfg.d_model
+    d_in, H, hd = _mdims(cfg)
+    p = {
+        "wq": dense_init(kg(), (d, d_in)),
+        "wk": dense_init(kg(), (d, d_in)),
+        "wv": dense_init(kg(), (d, d_in)),
+        "wi": dense_init(kg(), (d, H)),      # input gate (exp)
+        "wf": dense_init(kg(), (d, H)),      # forget gate (sigmoid)
+        "wo_gate": dense_init(kg(), (d, d_in)),
+        "out_proj": dense_init(kg(), (d_in, d)),
+    }
+    logical = {
+        "wq": ("d_in", "feat"), "wk": ("d_in", "feat"), "wv": ("d_in", "feat"),
+        "wi": ("d_in", "none"), "wf": ("d_in", "none"),
+        "wo_gate": ("d_in", "feat"), "out_proj": ("feat", "d_in"),
+    }
+    return p, logical
+
+
+def mlstm_init_state(cfg, batch, dtype=jnp.float32):
+    d_in, H, hd = _mdims(cfg)
+    return {
+        "C": jnp.zeros((batch, H, hd, hd), dtype),
+        "n": jnp.zeros((batch, H, hd), dtype),
+        "m": jnp.full((batch, H), -1e30, dtype),
+    }
+
+
+def _mlstm_qkvif(cfg, p, x):
+    d_in, H, hd = _mdims(cfg)
+    B, S, _ = x.shape
+    # Re-anchor the batch sharding after every projection: without this,
+    # SPMD resolves (batch-sharded x) × (model-sharded W) as partial matmuls
+    # + an all-reduce of the full activation per einsum — 447 GB/device of
+    # all-reduce on xlstm train_4k (§Perf #2). The constraint makes SPMD
+    # all-gather the (much smaller) weights instead.
+    from .sharding import constrain as _constrain, rules_for as _rules_for
+
+    _r = _rules_for("ssm")
+
+    def _c(a):
+        dims = ("batch",) + (None,) * (a.ndim - 1)
+        return _constrain(a, _r, *dims)
+
+    q = _c((x @ p["wq"].astype(COMPUTE_DTYPE)).reshape(B, S, H, hd))
+    k = _c((x @ p["wk"].astype(COMPUTE_DTYPE)).reshape(B, S, H, hd)) * (hd ** -0.5)
+    v = _c((x @ p["wv"].astype(COMPUTE_DTYPE)).reshape(B, S, H, hd))
+    i_pre = _c((x @ p["wi"].astype(COMPUTE_DTYPE))).astype(jnp.float32)  # [B,S,H]
+    f_pre = _c((x @ p["wf"].astype(COMPUTE_DTYPE))).astype(jnp.float32)
+    return q, k, v, i_pre, f_pre
+
+
+def mlstm_chunked(cfg, p, x, state=None):
+    """x: [B,S,d] → (y [B,S,d], state). S % MLSTM_CHUNK == 0 (or S < chunk)."""
+    d_in, H, hd = _mdims(cfg)
+    B, S, d = x.shape
+    L = min(MLSTM_CHUNK, S)
+    nc = S // L
+    assert S % L == 0
+
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, x)
+    logf = jax.nn.log_sigmoid(f_pre)                  # [B,S,H]
+
+    qc = q.reshape(B, nc, L, H, hd)
+    kc = k.reshape(B, nc, L, H, hd)
+    vc = v.reshape(B, nc, L, H, hd)
+    ic = i_pre.reshape(B, nc, L, H)
+    fc = logf.reshape(B, nc, L, H)
+
+    cumf = jnp.cumsum(fc, axis=2)                     # inclusive per chunk
+    # log gate of source j as seen at target i (within chunk):
+    #   D[i,j] = cumf_i - cumf_j + i_pre_j   for j ≤ i
+    Dmat = cumf[:, :, :, None, :] - cumf[:, :, None, :, :] + ic[:, :, None, :, :]
+    causal = jnp.tril(jnp.ones((L, L), bool))
+    Dmat = jnp.where(causal[None, None, :, :, None], Dmat, -jnp.inf)
+
+    # carried state per chunk (scan): C, n, m
+    if state is None:
+        state = mlstm_init_state(cfg, B)
+    # inter-chunk gate: contribution of carry at position i has log-gate cumf_i
+    # overall stabilizer per position: m_i = max(max_j D[i,j], cumf_i + m_prev)
+
+    def chunk_step(carry, inp):
+        C_prev, n_prev, m_prev = carry
+        qb, kb, vb, Db, cumfb, ib = inp
+        # qb.. [B,L,H,hd]; Db [B,Li,Lj,H]; cumfb [B,L,H]
+        m_intra = Db.max(axis=2)                      # [B,Li,H]
+        m_inter = cumfb + m_prev[:, None, :]          # [B,L,H]
+        m_i = jnp.maximum(m_intra, m_inter)           # [B,L,H]
+        # intra scores
+        sc = jnp.exp(Db - m_i[:, :, None, :])         # [B,Li,Lj,H]
+        qk = jnp.einsum("blhd,bjhd->bljh", qb, kb,
+                        preferred_element_type=jnp.float32)
+        w = sc * qk
+        y_num_intra = jnp.einsum("bljh,bjhd->blhd", w.astype(COMPUTE_DTYPE), vb)
+        y_den_intra = w.sum(axis=2)                   # [B,Li,H] = q_i · n_intra_i
+        # inter: y += exp(cumf_i + m_prev - m_i) q·C_prev
+        g_inter = jnp.exp(m_inter - m_i)              # [B,L,H]
+        qC = jnp.einsum("blhd,bhde->blhe", qb, C_prev.astype(COMPUTE_DTYPE))
+        qn = jnp.einsum("blhd,bhd->blh", qb, n_prev.astype(COMPUTE_DTYPE))
+        y_num = y_num_intra.astype(jnp.float32) + g_inter[..., None] * qC.astype(jnp.float32)
+        y_den = y_den_intra.astype(jnp.float32) + g_inter * qn.astype(jnp.float32)
+        y = y_num / jnp.maximum(jnp.abs(y_den), 1.0)[..., None]
+        # state update to end of chunk with new stabilizer m_new
+        m_new = jnp.maximum(cumfb[:, -1, :] + m_prev, (cumfb[:, -1:, :] - cumfb + ib).max(axis=1))
+        gdec = jnp.exp(cumfb[:, -1, :] + m_prev - m_new)       # [B,H]
+        gsrc = jnp.exp(cumfb[:, -1:, :] - cumfb + ib - m_new[:, None, :])  # [B,L,H]
+        C_new = (C_prev * gdec[:, :, None, None]
+                 + jnp.einsum("blh,blhd,blhe->bhde", gsrc,
+                              kb.astype(jnp.float32), vb.astype(jnp.float32)))
+        n_new = (n_prev * gdec[:, :, None]
+                 + jnp.einsum("blh,blhd->bhd", gsrc, kb.astype(jnp.float32)))
+        return (C_new, n_new, m_new), y
+
+    inp = (
+        jnp.moveaxis(qc, 1, 0), jnp.moveaxis(kc, 1, 0), jnp.moveaxis(vc, 1, 0),
+        jnp.moveaxis(Dmat, 1, 0), jnp.moveaxis(cumf, 1, 0), jnp.moveaxis(ic, 1, 0),
+    )
+    (C, n, m), y = jax.lax.scan(chunk_step, (state["C"], state["n"], state["m"]), inp)
+    y = jnp.moveaxis(y, 0, 1).reshape(B, S, d_in)
+    o = jax.nn.sigmoid((x @ p["wo_gate"].astype(COMPUTE_DTYPE)).astype(jnp.float32))
+    y = (y * o).astype(COMPUTE_DTYPE)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), {"C": C, "n": n, "m": m}
+
+
+def mlstm_decode_step(cfg, p, x, state):
+    """x: [B,1,d]; exact single-step recurrence."""
+    d_in, H, hd = _mdims(cfg)
+    B = x.shape[0]
+    q, k, v, i_pre, f_pre = _mlstm_qkvif(cfg, p, x)
+    q, k, v = q[:, 0], k[:, 0], v[:, 0]               # [B,H,hd]
+    i_pre, f_pre = i_pre[:, 0], f_pre[:, 0]           # [B,H]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_prev, C_prev, n_prev = state["m"], state["C"], state["n"]
+    m_new = jnp.maximum(logf + m_prev, i_pre)
+    gdec = jnp.exp(logf + m_prev - m_new)
+    gsrc = jnp.exp(i_pre - m_new)
+    C = (C_prev * gdec[:, :, None, None]
+         + gsrc[:, :, None, None] * jnp.einsum("bhd,bhe->bhde",
+                                               k.astype(jnp.float32),
+                                               v.astype(jnp.float32)))
+    n = n_prev * gdec[:, :, None] + gsrc[:, :, None] * k.astype(jnp.float32)
+    num = jnp.einsum("bhd,bhde->bhe", q.astype(jnp.float32), C)
+    den = jnp.einsum("bhd,bhd->bh", q.astype(jnp.float32), n)
+    y = num / jnp.maximum(jnp.abs(den), 1.0)[..., None]
+    y = y.reshape(B, 1, d_in)
+    o = jax.nn.sigmoid((x @ p["wo_gate"].astype(COMPUTE_DTYPE)).astype(jnp.float32))
+    y = (y * o).astype(COMPUTE_DTYPE)
+    return y @ p["out_proj"].astype(COMPUTE_DTYPE), {"C": C, "n": n, "m": m_new}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM
+# ---------------------------------------------------------------------------
+
+
+def _sdims(cfg):
+    H = cfg.n_heads
+    hd = cfg.d_model // H
+    return H, hd
+
+
+def init_slstm(cfg, kg):
+    d = cfg.d_model
+    H, hd = _sdims(cfg)
+    p = {
+        "w_in": dense_init(kg(), (d, 4 * d)),          # i,f,z,o pre-activations
+        "r": dense_init(kg(), (H, hd, 4 * hd), scale=0.05),  # block-diag recurrence
+        "b": zeros_init(kg(), (4 * d,)),
+        "out_proj": dense_init(kg(), (d, d)),
+        # gated FF (factor 4/3, GLU) — the sLSTM block's post-projection
+        "ff_w1": dense_init(kg(), (d, 4 * d // 3)),
+        "ff_w3": dense_init(kg(), (d, 4 * d // 3)),
+        "ff_w2": dense_init(kg(), (4 * d // 3, d)),
+    }
+    logical = {
+        # The recurrence h_t → gates contracts hd every step: sharding r (or
+        # the gate dim) over "model" forces a per-timestep all-reduce inside
+        # the 4096-step scan — 412 GB/device of collective traffic on
+        # train_4k (§Perf #2). The recurrence is instead batch-parallel with
+        # replicated recurrent weights (they are tiny: H·hd·4hd).
+        "w_in": ("d_in", None), "r": ("none", "none", "none"), "b": ("none",),
+        "out_proj": ("d_in", "feat"),
+        "ff_w1": ("d_in", "feat"), "ff_w3": ("d_in", "feat"),
+        "ff_w2": ("feat", "d_in"),
+    }
+    return p, logical
+
+
+def slstm_init_state(cfg, batch, dtype=jnp.float32):
+    H, hd = _sdims(cfg)
+    return {
+        "c": jnp.zeros((batch, H, hd), dtype),
+        "n": jnp.zeros((batch, H, hd), dtype),
+        "h": jnp.zeros((batch, H, hd), dtype),
+        "m": jnp.full((batch, H, hd), -1e30, dtype),
+    }
+
+
+def _slstm_cell(p, H, hd, pre, st):
+    """pre: [B, 4d] input pre-activation; st: state dict. Returns (h, state)."""
+    rec = jnp.einsum("bhd,hdq->bhq", st["h"].astype(COMPUTE_DTYPE),
+                     p["r"].astype(COMPUTE_DTYPE)).astype(jnp.float32)
+    pre = pre.reshape(pre.shape[0], H, 4 * hd).astype(jnp.float32) + rec
+    i_pre, f_pre, z_pre, o_pre = jnp.split(pre, 4, axis=-1)   # [B,H,hd]
+    logf = jax.nn.log_sigmoid(f_pre)
+    m_new = jnp.maximum(logf + st["m"], i_pre)
+    i_g = jnp.exp(i_pre - m_new)
+    f_g = jnp.exp(logf + st["m"] - m_new)
+    z = jnp.tanh(z_pre)
+    o = jax.nn.sigmoid(o_pre)
+    c = f_g * st["c"] + i_g * z
+    n = f_g * st["n"] + i_g
+    h = o * c / jnp.maximum(jnp.abs(n), 1.0)
+    return h, {"c": c, "n": n, "h": h, "m": m_new}
+
+
+def slstm_seq(cfg, p, x, state=None):
+    """x: [B,S,d] → (y [B,S,d], state). Strictly sequential scan over S."""
+    H, hd = _sdims(cfg)
+    B, S, d = x.shape
+    if state is None:
+        state = slstm_init_state(cfg, B)
+    pre_all = x @ p["w_in"].astype(COMPUTE_DTYPE) + p["b"].astype(COMPUTE_DTYPE)
+
+    def step(st, pre_t):
+        h, st2 = _slstm_cell(p, H, hd, pre_t, st)
+        return st2, h
+
+    state, hs = jax.lax.scan(step, state, jnp.moveaxis(pre_all, 1, 0))
+    hs = jnp.moveaxis(hs, 0, 1).reshape(B, S, d).astype(COMPUTE_DTYPE)
+    y = hs @ p["out_proj"].astype(COMPUTE_DTYPE)
+    # gated FF
+    g = y @ p["ff_w1"].astype(COMPUTE_DTYPE)
+    u = y @ p["ff_w3"].astype(COMPUTE_DTYPE)
+    ff = (jax.nn.gelu(g.astype(jnp.float32)).astype(COMPUTE_DTYPE) * u) @ p[
+        "ff_w2"].astype(COMPUTE_DTYPE)
+    return ff, state
+
+
+def slstm_decode_step(cfg, p, x, state):
+    y, state = slstm_seq(cfg, p, x, state)
+    return y, state

@@ -1,0 +1,136 @@
+"""Unit tests for the burst energy model E⟨i,j⟩ (paper §4.2)."""
+
+import numpy as np
+import pytest
+
+from repro.core import (
+    PAPER_FRAM_MODEL,
+    ColumnSweep,
+    GraphBuilder,
+    burst_cost,
+    burst_detail,
+)
+
+
+def listing1_graph():
+    """The paper's Listing 1: sense → process → transmit."""
+    b = GraphBuilder()
+    b.packet("img", 80 * 60, )
+    b.packet("headCount", 1, keep=True)
+    b.task("sense", writes=("img",), cost=131.9e-3)
+    b.task("process", reads=("img",), writes=("headCount",), cost=2.16)
+    b.task("transmit", reads=("headCount",), cost=0.086e-3)
+    return b.build()
+
+
+CM = PAPER_FRAM_MODEL
+
+
+class TestSingleTaskBurst:
+    def test_sense_alone_stores_image(self):
+        g = listing1_graph()
+        d = burst_detail(g, CM, 1, 1)
+        # E⟨1,1⟩ = E_s + E_task + E_w(img): img is read later (l_inf > 1)
+        assert d.loads == []
+        assert d.stores == ["img"]
+        expected = 9e-6 + 131.9e-3 + (0.9e-6 + 4800 * 6.2e-9)
+        assert d.total == pytest.approx(expected, rel=1e-12)
+
+    def test_paper_image_store_cost(self):
+        # §6.2: "saving the entire 80×60 thermal picture into FRAM only
+        # requires 59.5 µJ" (the paper quotes the per-byte part)
+        assert 9600 * 6.2e-9 == pytest.approx(59.5e-6, rel=2e-3)
+
+    def test_process_alone_loads_and_stores(self):
+        g = listing1_graph()
+        d = burst_detail(g, CM, 2, 2)
+        assert d.loads == ["img"]
+        assert d.stores == ["headCount"]  # read by transmit
+
+    def test_transmit_alone(self):
+        g = listing1_graph()
+        d = burst_detail(g, CM, 3, 3)
+        assert d.loads == ["headCount"]
+        # headCount is keep=True → survives the application → stored? No:
+        # transmit does not write it; the packet is already in NVM.
+        assert d.stores == []
+
+
+class TestMultiTaskBurst:
+    def test_fusion_removes_intermediate_transfer(self):
+        g = listing1_graph()
+        # sense+process in one burst: img never touches NVM
+        d = burst_detail(g, CM, 1, 2)
+        assert d.loads == []
+        assert "img" not in d.stores
+        assert d.stores == ["headCount"]
+
+    def test_whole_app_only_keeps_output(self):
+        g = listing1_graph()
+        d = burst_detail(g, CM, 1, 3)
+        assert d.loads == []
+        # headCount written in-burst, keep=True → l_inf = n+1 > 3 → stored
+        assert d.stores == ["headCount"]
+
+    def test_shared_input_loaded_once(self):
+        b = GraphBuilder()
+        b.packet("x", 1000, external=True)
+        b.packet("a", 10, keep=True)
+        b.packet("b", 10, keep=True)
+        b.task("t1", reads=("x",), writes=("a",), cost=1.0)
+        b.task("t2", reads=("x",), writes=("b",), cost=1.0)
+        g = b.build()
+        d = burst_detail(g, CM, 1, 2)
+        assert d.loads.count("x") == 1  # second reader reuses volatile copy
+
+    def test_burst_cost_superadditivity(self):
+        # Merging bursts never increases cost beyond the separate parts
+        # (one fewer startup, never more transfers).
+        g = listing1_graph()
+        for i in range(1, 4):
+            for j in range(i, 4):
+                for k in range(i, j):
+                    merged = burst_cost(g, CM, i, j)
+                    split = burst_cost(g, CM, i, k) + burst_cost(g, CM, k + 1, j)
+                    assert merged <= split + 1e-15
+
+
+class TestColumnSweep:
+    def test_matches_reference_on_dense_graph(self):
+        rng = np.random.RandomState(0)
+        b = GraphBuilder()
+        b.packet("seed", 128, external=True)
+        avail = ["seed"]
+        for t in range(25):
+            reads = [avail[i] for i in rng.choice(len(avail), size=min(len(avail), 2), replace=False)]
+            w = b.packet(f"p{t}", int(rng.randint(1, 5000)), keep=bool(rng.rand() < 0.2))
+            b.task(f"t{t}", reads=tuple(reads), writes=(w,), cost=float(rng.rand()))
+            avail.append(w)
+        g = b.build()
+        for j, col in zip(range(1, g.n_tasks + 1), ColumnSweep(g, CM)):
+            for i in range(1, j + 1):
+                assert col[i] == pytest.approx(burst_cost(g, CM, i, j), rel=1e-9), (i, j)
+
+
+class TestValidation:
+    def test_ssa_violation(self):
+        b = GraphBuilder()
+        b.packet("x", 4)
+        b.task("t1", writes=("x",), cost=1)
+        b.task("t2", writes=("x",), cost=1)
+        with pytest.raises(ValueError, match="SSA"):
+            b.build()
+
+    def test_read_before_write(self):
+        b = GraphBuilder()
+        b.packet("x", 4)
+        b.task("t1", reads=("x",), cost=1)
+        b.task("t2", writes=("x",), cost=1)
+        with pytest.raises(ValueError, match="before it is written"):
+            b.build()
+
+    def test_inout_rejected(self):
+        b = GraphBuilder()
+        b.packet("x", 4, external=True)
+        with pytest.raises(ValueError, match="inout"):
+            b.task("t1", reads=("x",), writes=("x",), cost=1)

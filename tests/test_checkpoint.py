@@ -1,0 +1,89 @@
+"""Burst-checkpointed training: atomic commit, bit-exact resume, cadence
+planning (Algorithm 1 at pod scale)."""
+
+import glob
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint.burst_ckpt import BurstCheckpointer, plan_burst_schedule
+from repro.launch.train import train
+
+
+class TestCheckpointer:
+    def test_roundtrip(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = BurstCheckpointer(d)
+            state = {"w": jnp.arange(10.0), "step": jnp.int32(7)}
+            ck.save(3, state)
+            b, restored = ck.restore()
+            assert b == 3
+            np.testing.assert_array_equal(restored["w"], np.arange(10.0))
+
+    def test_uncommitted_burst_invisible(self):
+        """A checkpoint file without a committed index must not be restored —
+        simulates a crash between the state write and the index commit."""
+        with tempfile.TemporaryDirectory() as d:
+            ck = BurstCheckpointer(d)
+            ck.save(1, {"w": jnp.zeros(3)})
+            # fake a crash: newer ckpt file exists but index still says 1
+            import pickle
+            with open(os.path.join(d, "ckpt_00000002.pkl"), "wb") as fh:
+                pickle.dump({"w": np.ones(3)}, fh)
+            b, st = ck.restore()
+            assert b == 1
+            np.testing.assert_array_equal(st["w"], np.zeros(3))
+
+    def test_gc_keeps_recent(self):
+        with tempfile.TemporaryDirectory() as d:
+            ck = BurstCheckpointer(d, keep=2)
+            for b in range(1, 6):
+                ck.save(b, {"w": jnp.full(2, b)})
+            files = glob.glob(os.path.join(d, "ckpt_*"))
+            assert len(files) == 2
+            assert ck.restore()[0] == 5
+
+
+class TestTrainResume:
+    def test_resume_matches_uninterrupted(self):
+        """Crash after burst 1, resume → identical final loss trajectory."""
+        kw = dict(arch="qwen1.5-0.5b", steps=6, batch=2, seq=16, burst_steps=2,
+                  smoke=True, log_every=100)
+        with tempfile.TemporaryDirectory() as d1:
+            ref = train(ckpt_dir=d1, **kw)
+        with tempfile.TemporaryDirectory() as d2:
+            # run only burst 1 (steps 0-1), "crash", then resume
+            try:
+                train(ckpt_dir=d2, steps=2, **{k: v for k, v in kw.items()
+                                               if k != "steps"})
+            except SystemExit:
+                pass
+            out = train(ckpt_dir=d2, **kw)
+        # resumed losses (steps 2..5) must match the uninterrupted run exactly
+        np.testing.assert_allclose(out, ref[2:], rtol=1e-6)
+
+
+class TestBurstSchedule:
+    def test_bound_respected(self):
+        part = plan_burst_schedule(100, step_seconds=1.0, state_bytes=10**9,
+                                   max_loss_seconds=20.0, restart_seconds=5.0)
+        for b in part.bursts:
+            assert b.total <= 20.0 * (1 + 1e-9)
+        assert part.n_bursts >= 100 / 20
+
+    def test_expensive_checkpoints_force_more_bursts(self):
+        """An expensive state write eats into the per-burst loss budget, so
+        fewer steps fit per burst → more bursts (the paper's Fig. 7 shape:
+        transfer costs shrink the effective burst capacity)."""
+        fast = plan_burst_schedule(60, 1.0, 10**8, 20.0, restart_seconds=1.0,
+                                   disk_bw=1e10)
+        slow = plan_burst_schedule(60, 1.0, int(5e9), 20.0,
+                                   restart_seconds=1.0, disk_bw=1e9)
+        assert slow.n_bursts >= fast.n_bursts
+        # and the optimizer never exceeds the loss budget either way
+        for p in (fast, slow):
+            assert p.max_burst <= 20.0 * (1 + 1e-9)

@@ -1,0 +1,143 @@
+"""Pallas kernels vs pure-jnp oracles — shape/dtype sweeps (interpret mode).
+
+Each kernel sweeps sequence lengths that exercise multiple grid steps,
+block-divisibility fallbacks, GQA ratios, and both bf16/f32, asserting
+allclose against its ref.py oracle.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.apps.headcount import cnn_weights
+from repro.kernels.conv_window.ops import score_windows
+from repro.kernels.conv_window.ref import conv_window_scores_ref
+from repro.kernels.flash_attention.ops import (flash_attention,
+                                               flash_attention_reference)
+from repro.kernels.mlstm_chunk.ops import mlstm_cell
+from repro.kernels.mlstm_chunk.ref import mlstm_ref
+from repro.kernels.rmsnorm.ops import rmsnorm
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+
+
+def _rand(key, shape, dtype, scale=1.0):
+    return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)
+
+
+class TestFlashAttention:
+    @pytest.mark.parametrize("S,H,KV,hd,blk", [
+        (128, 4, 4, 64, 128),    # MHA, single block
+        (256, 8, 4, 64, 128),    # GQA 2:1, two k blocks
+        (512, 8, 2, 64, 128),    # GQA 4:1, four k blocks
+        (256, 4, 4, 128, 64),    # head_dim 128, small blocks
+    ])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    @pytest.mark.parametrize("causal", [True, False])
+    def test_matches_oracle(self, S, H, KV, hd, blk, dtype, causal):
+        B = 2
+        q = _rand(0, (B, S, H, hd), dtype)
+        k = _rand(1, (B, S, KV, hd), dtype)
+        v = _rand(2, (B, S, KV, hd), dtype)
+        o = flash_attention(q, k, v, causal=causal, block_k=blk, interpret=True)
+        o_ref = flash_attention_reference(q, k, v, causal=causal)
+        tol = 0.05 if dtype == jnp.bfloat16 else 2e-5
+        np.testing.assert_allclose(
+            o.astype(np.float32), o_ref.astype(np.float32), atol=tol, rtol=tol)
+
+    def test_cross_attention_kv_len(self):
+        """Non-power-of-two KV length (the 1601-vision-token case)."""
+        B, Sq, Sk, H, hd = 1, 64, 1601 % 512 + 99, 4, 64  # Sk = 212
+        q = _rand(0, (B, Sq, H, hd), jnp.float32)
+        k = _rand(1, (B, Sk, H, hd), jnp.float32)
+        v = _rand(2, (B, Sk, H, hd), jnp.float32)
+        o = flash_attention(q, k, v, causal=False, block_k=Sk, interpret=True)
+        o_ref = flash_attention_reference(q, k, v, causal=False)
+        np.testing.assert_allclose(o, o_ref, atol=2e-5, rtol=2e-5)
+
+    def test_first_token_attends_only_itself(self):
+        B, S, H, hd = 1, 128, 2, 64
+        q = _rand(0, (B, S, H, hd), jnp.float32)
+        k = _rand(1, (B, S, H, hd), jnp.float32)
+        v = _rand(2, (B, S, H, hd), jnp.float32)
+        o = flash_attention(q, k, v, causal=True, interpret=True)
+        np.testing.assert_allclose(o[:, 0], v[:, 0], atol=2e-5, rtol=2e-5)
+
+
+class TestRMSNorm:
+    @pytest.mark.parametrize("shape", [(7, 64), (2, 33, 256), (1, 1, 4096),
+                                       (5, 3, 2, 128)])
+    @pytest.mark.parametrize("dtype", [jnp.bfloat16, jnp.float32])
+    def test_matches_oracle(self, shape, dtype):
+        x = _rand(0, shape, dtype, scale=3.0)
+        w = _rand(1, shape[-1:], jnp.float32)
+        y = rmsnorm(x, w, interpret=True)
+        y_ref = rmsnorm_ref(x, w)
+        np.testing.assert_allclose(y.astype(np.float32),
+                                   y_ref.astype(np.float32), atol=1e-2, rtol=1e-2)
+
+    def test_unit_variance(self):
+        x = _rand(0, (16, 512), jnp.float32, scale=10.0)
+        y = rmsnorm(x, jnp.ones(512), interpret=True)
+        ms = np.mean(np.square(np.asarray(y)), axis=-1)
+        np.testing.assert_allclose(ms, 1.0, atol=1e-3)
+
+
+class TestMlstmChunk:
+    @pytest.mark.parametrize("S,hd,chunk", [(128, 64, 64), (256, 64, 128),
+                                            (128, 128, 32), (64, 32, 64)])
+    def test_matches_sequential_oracle(self, S, hd, chunk):
+        B, H = 2, 2
+        q = _rand(0, (B, S, H, hd), jnp.float32, 0.5)
+        k = _rand(1, (B, S, H, hd), jnp.float32, 0.5)
+        v = _rand(2, (B, S, H, hd), jnp.float32, 0.5)
+        ip = _rand(3, (B, S, H), jnp.float32)
+        fp = _rand(4, (B, S, H), jnp.float32) + 2.0
+        y = mlstm_cell(q, k, v, ip, fp, chunk=chunk, interpret=True)
+
+        def fold(a):
+            return a.transpose(0, 2, 1, *range(3, a.ndim)).reshape(
+                B * H, S, *a.shape[3:])
+
+        y_ref = mlstm_ref(fold(q), fold(k), fold(v), fold(ip), fold(fp))
+        y_ref = y_ref.reshape(B, H, S, hd).transpose(0, 2, 1, 3)
+        np.testing.assert_allclose(y, y_ref, atol=1e-3, rtol=1e-3)
+
+    def test_forget_gate_saturation_stable(self):
+        """Strongly negative forget gates must not produce NaN (log-space m)."""
+        B, S, H, hd = 1, 128, 1, 32
+        q = _rand(0, (B, S, H, hd), jnp.float32)
+        k = _rand(1, (B, S, H, hd), jnp.float32)
+        v = _rand(2, (B, S, H, hd), jnp.float32)
+        ip = jnp.full((B, S, H), 5.0)
+        fp = jnp.full((B, S, H), -20.0)
+        y = mlstm_cell(q, k, v, ip, fp, chunk=64, interpret=True)
+        assert np.isfinite(np.asarray(y)).all()
+
+
+class TestConvWindow:
+    @pytest.mark.parametrize("n,seed", [(1, 0), (37, 1), (128, 2), (300, 3)])
+    def test_matches_oracle(self, n, seed):
+        w = cnn_weights(seed)
+        wins = np.random.RandomState(seed).rand(n, 12, 12).astype(np.float32)
+        s = score_windows(wins, w, interpret=True)
+        s_ref = conv_window_scores_ref(jnp.asarray(wins), w["conv1"], w["b1"],
+                                       w["conv2"], w["b2"], w["fc"], w["fc_b"])
+        np.testing.assert_allclose(s, s_ref, atol=1e-4, rtol=1e-4)
+
+    def test_matches_headcount_app_cnn(self):
+        """The Pallas kernel scores == the head-count application's CNN task
+        bodies (same weights, same windows) — the paper's kernel, TPU-native."""
+        from repro.core.apps.headcount import _jax_kernels
+
+        normalize, score_window = _jax_kernels()
+        w = cnn_weights(7)
+        img = np.random.RandomState(7).randint(0, 65535, (60, 80)).astype(np.uint16)
+        norm = np.asarray(normalize(img))
+        f = norm.astype(np.float32) / 65535.0
+        coords = [(0, 0), (3, 9), (40, 60), (12, 30)]
+        wins = np.stack([f[y:y + 12, x:x + 12] for (y, x) in coords])
+        s_kernel = score_windows(wins, w, interpret=True)
+        s_app = [float(score_window(norm, {k: jnp.asarray(v) for k, v in w.items()},
+                                    1, y, x)) for (y, x) in coords]
+        np.testing.assert_allclose(s_kernel, s_app, atol=1e-4, rtol=1e-4)
