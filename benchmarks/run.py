@@ -111,6 +111,68 @@ def optimizer_scaling():
              "column-sweep O(n^2); paper O(n^3 |P|)")
 
 
+def partition_jax_engine():
+    """Jitted batched engine vs the numpy `sweep` path (same outputs: optimal
+    E_total + bounds per Q). Headcount Q-grid sweeps at two reductions, the
+    optimizer-scaling ladder, and the whole zoo in one vmapped batch."""
+    from repro.core import lower_zoo, q_min as qmin_np, tpu_host_offload_model
+    from repro.core.partition_jax import sweep_jax, sweep_jax_batched
+
+    def best_of(f, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.time()
+            f()
+            ts.append(time.time() - t0)
+        return min(ts)
+
+    # Output parity note: sweep() eagerly builds full Partition objects
+    # (per-burst details) per feasible Q; the engine returns the DSE answers
+    # (e_total + bounds per Q) as arrays. The speedup row compares those
+    # paths as a consumer would call them; the *_jax_full_parts_ms row adds
+    # the cost of materializing every Partition from the jax result too.
+    for scale in (192, 128, 64):
+        g = build_graph(THERMAL.reduced(scale))
+        qmn = qmin_np(g, CM)
+        qs = list(np.geomspace(qmn, g.total_task_cost() * 1.05, 4096))
+        sweep_jax(g, CM, qs)  # compile outside the timed region
+        t_jax = best_of(lambda: sweep_jax(g, CM, qs))
+        t_np = best_of(lambda: sweep(g, CM, qs))
+        tag = f"partition_jax.headcount_n{g.n_tasks}"
+        _row(f"{tag}.q4096_numpy_ms", f"{t_np * 1e3:.1f}",
+             "sweep(): dp + eager Partition objects")
+        _row(f"{tag}.q4096_jax_ms", f"{t_jax * 1e3:.1f}",
+             "jitted: e_total + bounds arrays")
+        _row(f"{tag}.q4096_speedup", f"{t_np / t_jax:.1f}",
+             "acceptance: >=5x (n=33 row); see parity note")
+        if scale == 192:
+            t_jp = best_of(
+                lambda: sweep_jax(g, CM, qs).to_partitions(g, CM), n=2
+            )
+            _row(f"{tag}.q4096_jax_full_parts_ms", f"{t_jp * 1e3:.1f}",
+                 "jax engine + eager Partition objects (parity w/ numpy)")
+
+    # whole model zoo, one vmapped kernel: 10 graphs x 512 Q points
+    cm = tpu_host_offload_model()
+    zoo = lower_zoo(batch=8, seq=4096)
+    names = sorted(zoo)
+    qmns = {n: qmin_np(zoo[n], cm) for n in names}
+    qs = list(np.geomspace(min(qmns.values()), max(qmns.values()) * 64, 512))
+    graphs = [zoo[n] for n in names]
+    sweep_jax_batched(graphs, cm, qs)  # compile
+    t = best_of(lambda: sweep_jax_batched(graphs, cm, qs), n=2)
+    _row("partition_jax.zoo.batched_ms", f"{t * 1e3:.1f}",
+         f"{len(names)} graphs x 512 Q, one vmap")
+    for n, res in zip(names, sweep_jax_batched(graphs, cm, qs)):
+        feas = np.flatnonzero(res.feasible)
+        lo = feas[0] if len(feas) else -1
+        b = res.bounds(int(feas[-1])) if len(feas) else []
+        _row(f"partition_jax.zoo.{n}", f"{zoo[n].n_tasks}",
+             f"qmin={qmns[n] * 1e3:.2f}ms bursts@qmin="
+             f"{len(res.bounds(int(lo))) if lo >= 0 else 0} "
+             f"bursts@64x={len(b)}")
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -184,6 +246,7 @@ def main() -> None:
     fig6_partitioning_comparison()
     fig7_fig8_design_space()
     optimizer_scaling()
+    partition_jax_engine()
     julienne_planners()
     roofline_summary()
     kernel_microbench()

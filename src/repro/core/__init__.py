@@ -18,7 +18,22 @@ from .cost import (
     tpu_pipeline_model,
     tpu_remat_model,
 )
-from .graph import GraphBuilder, Packet, Task, TaskGraph
+from .graph import (
+    GraphArrays,
+    GraphBuilder,
+    Packet,
+    Task,
+    TaskGraph,
+    stack_graph_arrays,
+)
+from .layer_profile import (
+    build_activation_graph,
+    external_inputs,
+    lower_config,
+    lower_zoo,
+    memory_cost_model,
+    profile_model,
+)
 from .partition import (
     Infeasible,
     Partition,
@@ -43,3 +58,22 @@ from .runtime import (
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]
+
+# The jitted partitioning engine imports jax; load it lazily (PEP 562) so
+# pure-numpy analysis (`import repro.core`) stays jax-free.
+_JAX_EXPORTS = (
+    "JaxSweep",
+    "sweep_jax",
+    "sweep_jax_batched",
+    "optimal_partition_jax",
+    "cost_scalars",
+)
+__all__ += list(_JAX_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _JAX_EXPORTS:
+        from . import partition_jax
+
+        return getattr(partition_jax, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -27,7 +27,8 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 
 import numpy as np
 
-__all__ = ["Packet", "Task", "TaskGraph", "GraphBuilder"]
+__all__ = ["Packet", "Task", "TaskGraph", "GraphBuilder", "GraphArrays",
+           "stack_graph_arrays"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -74,6 +75,108 @@ class Task:
                 f"task {self.name!r}: packet both read and written — model "
                 "'inout' as a read of the old version plus a write of a new one (SSA)"
             )
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphArrays:
+    """Dense, padded, cost-model-independent export of a :class:`TaskGraph`.
+
+    The burst recurrence (§4.2, see :mod:`.burst`) only ever inspects, per
+    task ``j`` (1-based) and per packet it touches: the packet's transfer
+    size, its DMA-initiation weight, its last touch strictly before ``j``
+    (``l_j``), its writer, and its overall last use (``l_∞``). Those are
+    exported here as rectangular arrays — one row per task, one column per
+    read/write *slot* — so that graphs of different sizes pad to a common
+    shape and batch together under ``jax.vmap`` (see
+    :mod:`repro.core.partition_jax`).
+
+    Shapes: ``e_task`` is ``(N,)``; read arrays are ``(N, R)``; write arrays
+    are ``(N, W)`` where ``N ≥ n_tasks`` and R/W are ≥ the per-task maximum
+    read/write counts. Padded slots have ``*_valid == 0`` and contribute
+    exactly zero to every cost term (their bytes/weights are zeroed too).
+    Cost-model scalars (E_s, c0/c1 per direction) are *not* baked in — the
+    same export serves the FRAM, PCIe-offload, remat, and HBM-bytes models.
+
+    Index conventions match the paper: tasks are 1-based, ``read_lt == 0``
+    means "never touched before" (external / first use), ``read_writer == 0``
+    means external, and ``l_∞ == n_tasks + 1`` marks kept outputs.
+    """
+
+    n_tasks: int
+    e_task: np.ndarray       # (N,)   f64  task execution cost, 0-padded
+    read_bytes: np.ndarray   # (N, R) f64  |p| per read slot
+    read_c0w: np.ndarray     # (N, R) f64  c0_weight per read slot
+    read_lt: np.ndarray      # (N, R) i32  l_j(p): last touch strictly before j
+    read_writer: np.ndarray  # (N, R) i32  writer(p) (0 = external)
+    read_linf: np.ndarray    # (N, R) i32  l_∞(p) of the read packet
+    read_valid: np.ndarray   # (N, R) f64  1.0 for real slots, 0.0 padding
+    write_bytes: np.ndarray  # (N, W) f64
+    write_c0w: np.ndarray    # (N, W) f64
+    write_linf: np.ndarray   # (N, W) i32  l_∞(p) of the written packet
+    write_valid: np.ndarray  # (N, W) f64
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.e_task.shape[-1])
+
+    @property
+    def r_pad(self) -> int:
+        return int(self.read_bytes.shape[-1])
+
+    @property
+    def w_pad(self) -> int:
+        return int(self.write_bytes.shape[-1])
+
+    def padded(self, n_pad: int, r_pad: int, w_pad: int) -> "GraphArrays":
+        """Re-pad to a (larger) common shape, for cross-graph batching."""
+        if n_pad < self.n_pad or r_pad < self.r_pad or w_pad < self.w_pad:
+            raise ValueError(
+                f"cannot shrink padding {(self.n_pad, self.r_pad, self.w_pad)} "
+                f"to {(n_pad, r_pad, w_pad)}"
+            )
+
+        def pad(a: np.ndarray, *target: int) -> np.ndarray:
+            widths = [(0, t - s) for t, s in zip(target, a.shape)]
+            return np.pad(a, widths)
+
+        return GraphArrays(
+            n_tasks=self.n_tasks,
+            e_task=pad(self.e_task, n_pad),
+            read_bytes=pad(self.read_bytes, n_pad, r_pad),
+            read_c0w=pad(self.read_c0w, n_pad, r_pad),
+            read_lt=pad(self.read_lt, n_pad, r_pad),
+            read_writer=pad(self.read_writer, n_pad, r_pad),
+            read_linf=pad(self.read_linf, n_pad, r_pad),
+            read_valid=pad(self.read_valid, n_pad, r_pad),
+            write_bytes=pad(self.write_bytes, n_pad, w_pad),
+            write_c0w=pad(self.write_c0w, n_pad, w_pad),
+            write_linf=pad(self.write_linf, n_pad, w_pad),
+            write_valid=pad(self.write_valid, n_pad, w_pad),
+        )
+
+
+def stack_graph_arrays(arrays: Sequence[GraphArrays]) -> GraphArrays:
+    """Stack exports of different graphs into one batch (leading axis B).
+
+    All arrays are re-padded to the largest (N, R, W) in the batch;
+    ``n_tasks`` becomes an ``(B,)`` int array. The result is what
+    :func:`repro.core.partition_jax.sweep_jax_batched` vmaps over.
+    """
+    if not arrays:
+        raise ValueError("empty batch")
+    n = max(a.n_pad for a in arrays)
+    r = max(a.r_pad for a in arrays)
+    w = max(a.w_pad for a in arrays)
+    padded = [a.padded(n, r, w) for a in arrays]
+    fields = {
+        f.name: np.stack([getattr(a, f.name) for a in padded])
+        for f in dataclasses.fields(GraphArrays)
+        if f.name != "n_tasks"
+    }
+    return GraphArrays(
+        n_tasks=np.array([a.n_tasks for a in arrays], dtype=np.int32),  # type: ignore[arg-type]
+        **fields,
+    )
 
 
 class TaskGraph:
@@ -208,6 +311,74 @@ class TaskGraph:
                 )
             )
         return TaskGraph(self.tasks[lo - 1 : hi], pkts)
+
+    def to_arrays(
+        self,
+        n_pad: Optional[int] = None,
+        r_pad: Optional[int] = None,
+        w_pad: Optional[int] = None,
+    ) -> GraphArrays:
+        """Export the §4.2 analysis products as dense padded arrays.
+
+        ``n_pad`` / ``r_pad`` / ``w_pad`` override the natural task / read-slot
+        / write-slot counts (must be ≥ them) so that different graphs share a
+        shape and batch under ``vmap``. See :class:`GraphArrays` for the
+        exact per-field semantics.
+        """
+        if n_pad is None and r_pad is None and w_pad is None:
+            cached = getattr(self, "_arrays_cache", None)
+            if cached is not None:
+                return cached
+        n = self.n_tasks
+        nat_r = max((len(t.reads) for t in self.tasks), default=0)
+        nat_w = max((len(t.writes) for t in self.tasks), default=0)
+        N = n if n_pad is None else int(n_pad)
+        R = max(nat_r if r_pad is None else int(r_pad), 1)
+        W = max(nat_w if w_pad is None else int(w_pad), 1)
+        if N < n or R < nat_r or W < nat_w:
+            raise ValueError(
+                f"padding ({N},{R},{W}) smaller than natural ({n},{nat_r},{nat_w})"
+            )
+
+        e_task = np.zeros(N, dtype=np.float64)
+        rb = np.zeros((N, R), dtype=np.float64)
+        rc0 = np.zeros((N, R), dtype=np.float64)
+        rlt = np.zeros((N, R), dtype=np.int32)
+        rwr = np.zeros((N, R), dtype=np.int32)
+        rli = np.zeros((N, R), dtype=np.int32)
+        rv = np.zeros((N, R), dtype=np.float64)
+        wb = np.zeros((N, W), dtype=np.float64)
+        wc0 = np.zeros((N, W), dtype=np.float64)
+        wli = np.zeros((N, W), dtype=np.int32)
+        wv = np.zeros((N, W), dtype=np.float64)
+
+        for idx, t in enumerate(self.tasks):
+            e_task[idx] = t.cost
+            for r, (name, lt) in enumerate(zip(t.reads, self.read_last_touch[idx])):
+                p = self.packets[name]
+                rb[idx, r] = p.nbytes
+                rc0[idx, r] = p.c0_weight
+                rlt[idx, r] = lt
+                rwr[idx, r] = self._writer[name]
+                rli[idx, r] = self.l_inf[name]
+                rv[idx, r] = 1.0
+            for w, name in enumerate(t.writes):
+                p = self.packets[name]
+                wb[idx, w] = p.nbytes
+                wc0[idx, w] = p.c0_weight
+                wli[idx, w] = self.l_inf[name]
+                wv[idx, w] = 1.0
+
+        out = GraphArrays(
+            n_tasks=n,
+            e_task=e_task,
+            read_bytes=rb, read_c0w=rc0, read_lt=rlt,
+            read_writer=rwr, read_linf=rli, read_valid=rv,
+            write_bytes=wb, write_c0w=wc0, write_linf=wli, write_valid=wv,
+        )
+        if n_pad is None and r_pad is None and w_pad is None:
+            self._arrays_cache = out  # graphs are immutable once built
+        return out
 
     def __repr__(self) -> str:  # pragma: no cover
         return f"TaskGraph(n_tasks={self.n_tasks}, n_packets={len(self.packets)})"

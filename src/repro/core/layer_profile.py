@@ -24,14 +24,17 @@ Two cost interpretations of the same graph (DESIGN.md §2):
 from __future__ import annotations
 
 import dataclasses
-from typing import Dict, List, Optional, Tuple
+from typing import Callable, Dict, List, Mapping, Optional, Tuple, Union
+
+import numpy as np
 
 from ..configs.base import ModelConfig
 from .cost import PEAK_FLOPS, CostModel, LinearTransfer
 from .graph import GraphBuilder, TaskGraph
 
 __all__ = ["LayerProfile", "profile_model", "build_activation_graph",
-           "time_cost_model", "memory_cost_model"]
+           "time_cost_model", "memory_cost_model", "lower_config",
+           "lower_zoo", "external_inputs"]
 
 BYTES_ACT = 2  # bf16 activations
 
@@ -166,6 +169,97 @@ def build_activation_graph(
         b.task(lp.name, reads=reads, writes=(pkt,), cost=cost)
         prev = pkt
     return b.build()
+
+
+def _attach_bodies(
+    profiles: List[LayerProfile], seed: int
+) -> Dict[str, Callable[[Mapping[str, object]], Dict[str, object]]]:
+    """Deterministic numeric bodies for a lowered graph (tests/fault injection).
+
+    Each layer body is a pure function of its declared inputs — a fixed random
+    projection of the input means through tanh — so partitioned execution must
+    reproduce atomic execution bit-for-bit (the Ladybirds no-side-effects
+    contract). Values are small (8,) float64 vectors: packet ``nbytes`` is cost
+    metadata, the runtime stores whatever the body returns.
+    """
+    rng = np.random.RandomState(seed)
+    fns: Dict[str, Callable[[Mapping[str, object]], Dict[str, object]]] = {}
+    for i, lp in enumerate(profiles):
+        w = rng.randn(8)
+        b = float(rng.randn())
+        out_name = f"act{i}"
+
+        def fn(inp, w=w, b=b, out_name=out_name):
+            acc = b
+            for name in sorted(inp):
+                acc += float(np.mean(np.asarray(inp[name], dtype=np.float64)))
+            return {out_name: np.tanh(w * acc)}
+
+        fns[lp.name] = fn
+    return fns
+
+
+def external_inputs(graph: TaskGraph, seed: int = 0) -> Dict[str, np.ndarray]:
+    """Deterministic values for every external packet of a lowered graph."""
+    rng = np.random.RandomState(seed + 1)
+    return {
+        name: rng.randn(8)
+        for name, p in sorted(graph.packets.items())
+        if p.external
+    }
+
+
+def lower_config(
+    cfg: Union[ModelConfig, str],
+    batch: int = 1,
+    seq: int = 256,
+    kind: str = "time",
+    with_fns: bool = False,
+    seed: int = 0,
+) -> TaskGraph:
+    """Lower a model-zoo config to a partitionable :class:`TaskGraph`.
+
+    Accepts a :class:`ModelConfig` or a registry name. ``kind`` selects the
+    E_task interpretation (``"time"`` seconds-at-peak / ``"memory"`` working
+    bytes, see module docstring); ``with_fns`` attaches runnable bodies so
+    the graph executes under :class:`repro.core.runtime.BurstRuntime`.
+    """
+    if isinstance(cfg, str):
+        from ..configs import get_config
+
+        cfg = get_config(cfg)
+    profiles, long_lived = profile_model(cfg, batch, seq)
+    graph = build_activation_graph(profiles, long_lived, kind=kind)
+    if with_fns:
+        fns = _attach_bodies(profiles, seed)
+        tasks = [
+            dataclasses.replace(t, fn=fns[t.name]) for t in graph.tasks
+        ]
+        graph = TaskGraph(tasks, graph.packets.values())
+    return graph
+
+
+def lower_zoo(
+    batch: int = 1,
+    seq: int = 256,
+    kind: str = "time",
+    with_fns: bool = False,
+    configs: Optional[Mapping[str, ModelConfig]] = None,
+) -> Dict[str, TaskGraph]:
+    """Lower every registered architecture (name → TaskGraph), in one call.
+
+    This is what opens the full model zoo as partitioning workloads: the
+    resulting graphs batch together through
+    :func:`repro.core.partition_jax.sweep_jax_batched`.
+    """
+    if configs is None:
+        from ..configs import REGISTRY
+
+        configs = REGISTRY
+    return {
+        name: lower_config(cfg, batch, seq, kind=kind, with_fns=with_fns)
+        for name, cfg in sorted(configs.items())
+    }
 
 
 def time_cost_model(transfer: CostModel) -> CostModel:

@@ -1,0 +1,393 @@
+"""JAX-native, jit-compiled burst partitioning engine (paper §4.3–§4.4).
+
+This is the batched re-expression of the two numpy reference paths:
+
+* the incremental column sweep (:class:`repro.core.burst.ColumnSweep`)
+  becomes a ``lax.scan`` over tasks, carrying the live column ``E⟨·,j⟩`` and
+  applying each task's three piecewise-constant updates as masked adds over
+  the dense arrays exported by :meth:`TaskGraph.to_arrays`;
+
+* the forward DAG-DP (:func:`repro.core.partition.optimal_partition_multi`)
+  rides in the same scan, broadcast across an arbitrary Q_max grid — one
+  compiled kernel juliennes the whole design space in one shot.
+
+A second ``vmap`` layer batches across *graphs*: :func:`sweep_jax_batched`
+takes padded exports of different applications (the whole model zoo, lowered
+via :func:`repro.core.layer_profile.lower_config`) and solves them together.
+
+The per-column recurrence, identical to :mod:`.burst` (all 1-based):
+
+    E⟨i,j⟩ = E⟨i,j-1⟩ + E_task(j) + S(j)
+           + Σ_{p ∈ reads(j)}  E_r(p) · [i > l_j(p)]            (new loads)
+           - Σ_{p ∈ reads(j)}  E_w(p) · [l_∞(p) = j]
+                                      · [1 ≤ writer(p)]
+                                      · [i ≤ writer(p)]          (store freed)
+    E⟨j,j⟩ = E_s + Σ_{p ∈ reads(j)} E_r(p) + E_task(j) + S(j)
+
+with ``S(j) = Σ_{p ∈ writes(j), l_∞(p) > j} E_w(p)``, and the fused DP:
+
+    dp[q, j]  = min_{1 ≤ i ≤ j, E⟨i,j⟩ ≤ Q_max[q]} dp[q, i-1] + E⟨i,j⟩
+
+Numerics run in float64 under :func:`jax.experimental.enable_x64` so results
+match the numpy oracles to ~ulp; infeasibility uses the same relative budget
+tolerance as the numpy path. Tie-breaking (argmin picks the smallest burst
+start) also matches, so reconstructed bounds agree bit-for-bit on generic
+cost vectors.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+from typing import List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import enable_x64
+
+from .cost import CostModel
+from .graph import GraphArrays, TaskGraph, stack_graph_arrays
+from .partition import Infeasible, Partition, _partition_from_bounds
+
+__all__ = [
+    "JaxSweep",
+    "sweep_jax",
+    "sweep_jax_batched",
+    "optimal_partition_jax",
+    "cost_scalars",
+]
+
+# Same budget tolerance as the numpy DP (see partition.py): columns accumulate
+# in a different order than the reference model, so exactly-at-budget bursts
+# may sit a few ulp above Q_max.
+_REL = 1e-9
+_ABS = 1e-12
+
+# Read-slot count above which the column update switches from the
+# order-preserving unrolled loop to one masked 2-D reduction.
+_UNROLL_MAX = 8
+
+
+def cost_scalars(cost: CostModel) -> np.ndarray:
+    """(E_s, read c0, read c1, write c0, write c1) as a float64 vector."""
+    return np.array(
+        [cost.e_startup, cost.read.c0, cost.read.c1, cost.write.c0, cost.write.c1],
+        dtype=np.float64,
+    )
+
+
+# ---------------------------------------------------------------------------
+# The jitted engine
+# ---------------------------------------------------------------------------
+
+
+def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
+    """Column sweep + multi-Q DP + bounds reconstruction for one graph.
+
+    ``ga`` holds the GraphArrays fields as jnp arrays of static shape
+    (N,), (N,R), (N,W); ``n_tasks`` is a traced scalar (≤ N); ``qs`` is the
+    (nq,) Q_max grid. Returns (dp, parent, e_total, feasible, starts).
+    """
+    e_s, r_c0, r_c1, w_c0, w_c1 = (cost_vec[k] for k in range(5))
+    N = ga["e_task"].shape[0]
+    R = ga["read_bytes"].shape[1]
+    W = ga["write_bytes"].shape[1]
+    nq = qs.shape[0]
+    i_idx = jnp.arange(N + 1)
+
+    # Per-slot transfer costs under this cost model (padding contributes 0).
+    read_cost = ga["read_valid"] * (r_c0 * ga["read_c0w"] + r_c1 * ga["read_bytes"])
+    # E_w of the *read* packet — charged back when the burst absorbs both the
+    # writer and the last reader, making the intermediate store unnecessary.
+    read_free = ga["read_valid"] * (w_c0 * ga["read_c0w"] + w_c1 * ga["read_bytes"])
+    write_cost = ga["write_valid"] * (
+        w_c0 * ga["write_c0w"] + w_c1 * ga["write_bytes"]
+    )
+
+    # S(j): accumulated write-slot by write-slot (left-to-right) so the
+    # float64 rounding sequence is identical to ColumnSweep's Python sum —
+    # that keeps dp tables (and argmin tie-breaks) bit-compatible with numpy.
+    j_col = jnp.arange(1, N + 1)
+    store_add = jnp.zeros(N)
+    for w in range(W):
+        keep = ga["write_linf"][:, w] > j_col
+        store_add = jnp.where(keep, store_add + write_cost[:, w], store_add)
+
+    q_budget = qs * (1.0 + _REL) + _ABS
+    i_tail = i_idx[1:]  # i = 1..N
+    i_tail32 = i_tail.astype(jnp.int32)
+
+    def make_step(Wc):
+        """Scan body for the chunk whose steps all have j ≤ Wc: candidate
+        tables are (nq, Wc) instead of (nq, N) — early chunks pay only for
+        the bursts that can actually exist yet (~40% less DP work overall)."""
+
+        def step(carry, xs):
+            col, dp = carry
+            j, e_j, s_j, rcost, rfree, rlt, rwriter, rlinf = xs
+            prev = (i_idx >= 1) & (i_idx < j)
+            # 1) extend all existing bursts ⟨i, j-1⟩ with task j. For small R
+            # the read-slot loop is unrolled at trace time and applies the
+            # adds in the same order as the numpy sweep, keeping columns
+            # bit-identical (so argmin tie-breaks — and hence bounds — match
+            # numpy exactly). Wide-reader graphs (R > _UNROLL_MAX, e.g.
+            # head-count's 5k-reader sort task) use one masked 2-D reduction
+            # instead: same values to ~ulp (XLA's FMA contraction already
+            # perturbs those graphs anyway).
+            col = jnp.where(prev, col + (e_j + s_j), col)
+            if R <= _UNROLL_MAX:
+                sum_er = e_j * 0.0
+                for r in range(R):
+                    col = jnp.where(prev & (i_idx > rlt[r]), col + rcost[r], col)
+                    freed = (rlinf[r] == j) & (rwriter[r] >= 1)
+                    col = jnp.where(
+                        prev & freed & (i_idx <= rwriter[r]), col - rfree[r], col
+                    )
+                    sum_er = sum_er + rcost[r]
+            else:
+                loads = (rcost[None, :] * (i_idx[:, None] > rlt[None, :])).sum(1)
+                freed = (
+                    rfree[None, :]
+                    * ((rlinf == j) & (rwriter >= 1))[None, :]
+                    * (i_idx[:, None] <= rwriter[None, :])
+                ).sum(1)
+                col = jnp.where(prev, col + loads - freed, col)
+                sum_er = rcost.sum()
+            # 2) the new single-task burst ⟨j,j⟩
+            col = col.at[j].set(e_s + sum_er + e_j + s_j)
+
+            # 3) DP relaxation dp[q, j] = min_i dp[q, i-1] + E⟨i,j⟩ over the
+            # whole Q grid at once. No i ≤ j mask is needed: dp columns ≥ j
+            # are still inf from initialization, so candidates beyond the
+            # diagonal are inf automatically.
+            c = col[1 : Wc + 1]
+            cand = dp[:, :Wc] + jnp.where(
+                c[None, :] <= q_budget[:, None], c[None, :], jnp.inf
+            )
+            # Two single-operand reduces (XLA vectorizes those; its variadic
+            # (value, index) reduce lowers to a scalar loop): the min, then
+            # the smallest burst start achieving it — numpy's first-minimum
+            # argmin, so parents tie-break identically on identical columns.
+            mn = jnp.min(cand, axis=1)
+            best = jnp.min(
+                jnp.where(cand == mn[:, None], i_tail32[None, :Wc], N + 1),
+                axis=1,
+            )
+            # dp carries columns 0..N-1 (column N is never a predecessor);
+            # the final table is reassembled from the emitted mins below.
+            dp = dp.at[:, j].set(mn, mode="drop")
+            return (col, dp), (mn, best)
+
+        return step
+
+    xs = (
+        jnp.arange(1, N + 1),
+        ga["e_task"],
+        store_add,
+        read_cost,
+        read_free,
+        ga["read_lt"],
+        ga["read_writer"],
+        ga["read_linf"],
+    )
+    dp0 = jnp.full((nq, N), jnp.inf).at[:, 0].set(0.0)
+    carry = (jnp.zeros(N + 1), dp0)
+    n_chunks = min(4, N)
+    edges = sorted({-(-N * k // n_chunks) for k in range(1, n_chunks + 1)})
+    mns_parts, bests_parts = [], []
+    start = 0
+    for end in edges:
+        chunk_xs = tuple(a[start:end] for a in xs)
+        carry, (mn_c, best_c) = lax.scan(make_step(end), carry, chunk_xs)
+        mns_parts.append(mn_c)
+        bests_parts.append(best_c)
+        start = end
+    mns = jnp.concatenate(mns_parts, axis=0)
+    bests = jnp.concatenate(bests_parts, axis=0)
+
+    dp = jnp.concatenate([jnp.zeros((nq, 1)), mns.T], axis=1)  # (nq, N+1)
+    parent = jnp.zeros((nq, N + 1), dtype=jnp.int32).at[:, 1:].set(bests.T)
+    e_total = lax.dynamic_index_in_dim(mns, n_tasks - 1, axis=0, keepdims=False)
+    feasible = jnp.isfinite(e_total)
+
+    # 4) walk the parent pointers back from task n: mark each burst start
+    def reconstruct(pq):
+        def back(j, _):
+            i = jnp.where(j > 0, pq[j], 0)
+            emit = jnp.where(j > 0, i, N + 1)  # N+1 = trash slot
+            return jnp.where(j > 0, jnp.maximum(i - 1, 0), 0), emit
+
+        _, emits = lax.scan(back, n_tasks, None, length=N)
+        return jnp.zeros(N + 2, dtype=bool).at[emits].set(True)[: N + 1]
+
+    starts = jax.vmap(reconstruct)(parent)
+    return dp, parent, e_total, feasible, starts
+
+
+_dp_sweep_jit = jax.jit(_dp_sweep)
+_dp_sweep_vmap = jax.jit(
+    jax.vmap(_dp_sweep, in_axes=(0, 0, None, None))
+)
+
+
+# ---------------------------------------------------------------------------
+# Host-side wrappers
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class JaxSweep:
+    """Result of a jitted Q-grid sweep over one graph.
+
+    ``dp`` / ``parent`` are the full DP tables ((nq, N+1)); ``starts[q, i]``
+    is True iff some burst starts at task ``i`` under Q_max[q];
+    ``e_total[q]`` is inf (and ``feasible[q]`` False) where no partition fits.
+    """
+
+    n_tasks: int
+    q_values: List[Optional[float]]
+    dp: np.ndarray
+    parent: np.ndarray
+    e_total: np.ndarray
+    feasible: np.ndarray
+    starts: np.ndarray
+
+    def bounds(self, qi: int) -> Optional[List[Tuple[int, int]]]:
+        """Reconstructed burst bounds for Q index ``qi`` (None = infeasible)."""
+        if not self.feasible[qi]:
+            return None
+        s = np.flatnonzero(self.starts[qi, 1 : self.n_tasks + 1]) + 1
+        ends = list(s[1:] - 1) + [self.n_tasks]
+        return list(zip(s.tolist(), ends))
+
+    def to_partitions(
+        self, graph: TaskGraph, cost: CostModel
+    ) -> List[Optional[Partition]]:
+        """Full :class:`Partition` objects (numpy burst details) per Q value."""
+        out: List[Optional[Partition]] = []
+        for qi, q in enumerate(self.q_values):
+            b = self.bounds(qi)
+            if b is None:
+                out.append(None)
+                continue
+            part = _partition_from_bounds(graph, cost, b, q)
+            part.validate(graph)
+            out.append(part)
+        return out
+
+
+def _as_arrays(graph: Union[TaskGraph, GraphArrays]) -> GraphArrays:
+    return graph.to_arrays() if isinstance(graph, TaskGraph) else graph
+
+
+def _ga_dict(arrays: GraphArrays) -> dict:
+    return {
+        f.name: jnp.asarray(getattr(arrays, f.name))
+        for f in dataclasses.fields(GraphArrays)
+        if f.name != "n_tasks"
+    }
+
+
+def _qs_array(q_values: Sequence[Optional[float]]) -> np.ndarray:
+    return np.array(
+        [np.inf if q is None else float(q) for q in q_values], dtype=np.float64
+    )
+
+
+def _empty_sweep(q_values: Sequence[Optional[float]]) -> JaxSweep:
+    nq = len(q_values)
+    return JaxSweep(
+        n_tasks=0,
+        q_values=list(q_values),
+        dp=np.zeros((nq, 1)),
+        parent=np.zeros((nq, 1), dtype=np.int32),
+        e_total=np.zeros(nq),
+        feasible=np.ones(nq, dtype=bool),
+        starts=np.zeros((nq, 1), dtype=bool),
+    )
+
+
+def sweep_jax(
+    graph: Union[TaskGraph, GraphArrays],
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+) -> JaxSweep:
+    """One jitted pass: optimal E_total + bounds for every Q_max in the grid.
+
+    Drop-in analogue of :func:`repro.core.partition.sweep` /
+    ``optimal_partition_multi`` — infeasible Q values come back with
+    ``feasible == False`` instead of None. An empty graph is trivially
+    feasible everywhere (matching the numpy path).
+    """
+    arrays = _as_arrays(graph)
+    if arrays.n_tasks == 0:
+        return _empty_sweep(q_values)
+    with enable_x64():
+        dp, parent, e_total, feasible, starts = _dp_sweep_jit(
+            _ga_dict(arrays),
+            jnp.asarray(arrays.n_tasks, dtype=jnp.int32),
+            jnp.asarray(cost_scalars(cost)),
+            jnp.asarray(_qs_array(q_values)),
+        )
+        return JaxSweep(
+            n_tasks=int(arrays.n_tasks),
+            q_values=list(q_values),
+            dp=np.asarray(dp),
+            parent=np.asarray(parent),
+            e_total=np.asarray(e_total),
+            feasible=np.asarray(feasible),
+            starts=np.asarray(starts),
+        )
+
+
+def sweep_jax_batched(
+    graphs: Sequence[Union[TaskGraph, GraphArrays]],
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+) -> List[JaxSweep]:
+    """Solve many applications × many Q_max values in one vmapped kernel.
+
+    Graphs are padded to a common (N, R, W) via :func:`stack_graph_arrays`;
+    the compiled engine is shared across every graph in the batch (and across
+    future batches of the same padded shape).
+    """
+    arrays = [_as_arrays(g) for g in graphs]
+    nonempty = [(k, a) for k, a in enumerate(arrays) if a.n_tasks > 0]
+    out: List[Optional[JaxSweep]] = [None] * len(arrays)
+    for k, a in enumerate(arrays):
+        if a.n_tasks == 0:
+            out[k] = _empty_sweep(q_values)
+    if nonempty:
+        stacked = stack_graph_arrays([a for _, a in nonempty])
+        with enable_x64():
+            dp, parent, e_total, feasible, starts = _dp_sweep_vmap(
+                _ga_dict(stacked),
+                jnp.asarray(stacked.n_tasks, dtype=jnp.int32),
+                jnp.asarray(cost_scalars(cost)),
+                jnp.asarray(_qs_array(q_values)),
+            )
+        for b, (k, a) in enumerate(nonempty):
+            out[k] = JaxSweep(
+                n_tasks=int(a.n_tasks),
+                q_values=list(q_values),
+                dp=np.asarray(dp[b]),
+                parent=np.asarray(parent[b]),
+                e_total=np.asarray(e_total[b]),
+                feasible=np.asarray(feasible[b]),
+                starts=np.asarray(starts[b]),
+            )
+    return out  # type: ignore[return-value]
+
+
+def optimal_partition_jax(
+    graph: TaskGraph, cost: CostModel, q_max: Optional[float] = None
+) -> Partition:
+    """Single-Q convenience mirroring :func:`optimal_partition` (raises
+    :class:`Infeasible` when Q_max < Q_min)."""
+    res = sweep_jax(graph, cost, [q_max])
+    parts = res.to_partitions(graph, cost)
+    if parts[0] is None:
+        raise Infeasible(f"Q_max={q_max} admits no partition")
+    return parts[0]

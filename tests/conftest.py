@@ -1,0 +1,23 @@
+"""Test bootstrap: import paths + marker registration.
+
+Makes ``repro`` importable without an install (the repo is src-layout and has
+no setup.py) and the sibling test helpers importable regardless of how pytest
+was invoked.
+"""
+
+import os
+import sys
+
+_TESTS = os.path.dirname(os.path.abspath(__file__))
+_SRC = os.path.join(os.path.dirname(_TESTS), "src")
+for _p in (_SRC, _TESTS):
+    if _p not in sys.path:
+        sys.path.insert(0, _p)
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "slow: long-running model-zoo smoke / kernel sweeps "
+        "(deselect with -m 'not slow' for the fast tier-1 job)",
+    )

@@ -1,0 +1,59 @@
+"""Stdlib-``random`` generators for random task graphs and cost models.
+
+Shared by the partitioner property tests and the jitted-engine differential
+suite. These mirror the hypothesis strategies in test_partition.py but only
+need the standard library, so the core invariants still run in environments
+without hypothesis (e.g. the seed container). CI installs hypothesis, so
+there both drivers run — the seeded one as a deterministic floor, the
+fuzzer on top.
+"""
+
+import random
+from typing import List, Optional, Tuple
+
+from repro.core import CostModel, GraphBuilder, LinearTransfer, TaskGraph
+
+
+def random_task_graph(
+    rng: random.Random, max_tasks: int = 9, min_tasks: int = 1
+) -> TaskGraph:
+    """A random SSA-valid sequential application (shape mirrors the
+    hypothesis ``task_graphs`` strategy)."""
+    n = rng.randint(min_tasks, max_tasks)
+    b = GraphBuilder()
+    avail: List[str] = []
+    for i in range(rng.randint(0, 2)):
+        b.packet(f"e{i}", rng.randint(1, 4000), external=True)
+        avail.append(f"e{i}")
+    for t in range(n):
+        n_reads = rng.randint(0, min(3, len(avail)))
+        reads = rng.sample(avail, n_reads)
+        writes = []
+        for w in range(rng.randint(0, 2)):
+            name = f"p{t}_{w}"
+            b.packet(name, rng.randint(1, 4000), keep=rng.random() < 0.5)
+            writes.append(name)
+        b.task(f"t{t}", reads=tuple(reads), writes=tuple(writes),
+               cost=rng.uniform(0.01, 10.0))
+        avail.extend(writes)
+    return b.build()
+
+
+def random_cost_model(rng: random.Random) -> CostModel:
+    return CostModel(
+        e_startup=rng.uniform(0.0, 1.0),
+        read=LinearTransfer(rng.uniform(0.0, 0.1), rng.uniform(0.0, 1e-3)),
+        write=LinearTransfer(rng.uniform(0.0, 0.1), rng.uniform(0.0, 1e-3)),
+    )
+
+
+def random_q_grid(
+    rng: random.Random, q_min_val: float, q_whole: float
+) -> List[Optional[float]]:
+    """A Q_max grid straddling the feasibility boundary: None (unbounded),
+    0 and a sub-Q_min point (infeasible unless Q_min == 0), Q_min itself,
+    and a few random points up to past the whole-app cost."""
+    qs: List[Optional[float]] = [None, 0.0, q_min_val * 0.9, q_min_val]
+    hi = max(q_whole, q_min_val) * 1.1 + 1e-9
+    qs.extend(rng.uniform(0.0, hi) for _ in range(4))
+    return qs

@@ -20,6 +20,8 @@ from repro.kernels.mlstm_chunk.ref import mlstm_ref
 from repro.kernels.rmsnorm.ops import rmsnorm
 from repro.kernels.rmsnorm.ref import rmsnorm_ref
 
+pytestmark = pytest.mark.slow  # interpret-mode sweeps; fast job skips these
+
 
 def _rand(key, shape, dtype, scale=1.0):
     return (jax.random.normal(jax.random.PRNGKey(key), shape) * scale).astype(dtype)

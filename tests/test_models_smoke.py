@@ -10,6 +10,8 @@ import pytest
 from repro.configs import ALL_ARCHS, REGISTRY, SMOKE_CONFIGS
 from repro.models import api
 
+pytestmark = pytest.mark.slow  # ~minutes of XLA compiles; fast job skips these
+
 
 def _batch(cfg, B, S, key=1):
     tok = jax.random.randint(jax.random.PRNGKey(key), (B, S), 0, cfg.vocab)

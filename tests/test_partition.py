@@ -1,24 +1,30 @@
 """Optimality and invariant tests for the partitioner (paper §4.3–4.4).
 
-Property-based (hypothesis) invariants:
+Property invariants:
 
 * the fused DP, the paper's state-graph Dijkstra, and exhaustive search agree;
 * Q_min from the minimax sweep equals the brute-force bottleneck;
 * a partition exists iff Q_max ≥ Q_min;
 * E_total and N_bursts are monotone non-increasing in Q_max;
 * every returned partition is structurally valid and within budget.
+
+Each property is a plain ``check_*`` function. A stdlib-``random``
+seed-parametrized driver always runs them (so the suite works in minimal
+environments); when hypothesis is installed the same checks additionally run
+under its fuzzer. ``pytest.importorskip`` guards the hypothesis-only class.
 """
+
+import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+
+from helpers_random import random_cost_model, random_task_graph
 
 from repro.core import (
     PAPER_FRAM_MODEL,
-    CostModel,
     GraphBuilder,
     Infeasible,
-    LinearTransfer,
     brute_force_partition,
     dijkstra_partition,
     optimal_partition,
@@ -30,55 +36,20 @@ from repro.core import (
     whole_app_partition,
 )
 
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
 CM = PAPER_FRAM_MODEL
 
 
-# -- random graph strategy ----------------------------------------------------
+# -- the properties (shared between both drivers) ------------------------------
 
 
-@st.composite
-def task_graphs(draw, max_tasks=9):
-    n = draw(st.integers(1, max_tasks))
-    n_ext = draw(st.integers(0, 2))
-    b = GraphBuilder()
-    avail = []
-    for i in range(n_ext):
-        b.packet(f"e{i}", draw(st.integers(1, 4000)), external=True)
-        avail.append(f"e{i}")
-    for t in range(n):
-        n_reads = draw(st.integers(0, min(3, len(avail))))
-        reads = draw(
-            st.lists(st.sampled_from(avail), min_size=n_reads, max_size=n_reads,
-                     unique=True)
-        ) if avail else []
-        n_writes = draw(st.integers(0, 2))
-        writes = []
-        for w in range(n_writes):
-            name = f"p{t}_{w}"
-            b.packet(name, draw(st.integers(1, 4000)),
-                     keep=draw(st.booleans()))
-            writes.append(name)
-        b.task(f"t{t}", reads=tuple(reads), writes=tuple(writes),
-               cost=draw(st.floats(0.01, 10.0, allow_nan=False)))
-        avail.extend(writes)
-    return b.build()
-
-
-@st.composite
-def cost_models(draw):
-    return CostModel(
-        e_startup=draw(st.floats(0, 1.0)),
-        read=LinearTransfer(draw(st.floats(0, 0.1)), draw(st.floats(0, 1e-3))),
-        write=LinearTransfer(draw(st.floats(0, 0.1)), draw(st.floats(0, 1e-3))),
-    )
-
-
-# -- optimality ---------------------------------------------------------------
-
-
-@settings(max_examples=60, deadline=None)
-@given(task_graphs(), cost_models(), st.floats(0.0, 3.0))
-def test_dp_equals_bruteforce_and_dijkstra(g, cm, qscale):
+def check_dp_equals_bruteforce_and_dijkstra(g, cm, qscale):
     qmn = q_min(g, cm)
     whole = whole_app_partition(g, cm).e_total
     q = qmn + qscale * (whole - qmn) / 3.0
@@ -91,15 +62,11 @@ def test_dp_equals_bruteforce_and_dijkstra(g, cm, qscale):
     dj.validate(g)
 
 
-@settings(max_examples=60, deadline=None)
-@given(task_graphs(), cost_models())
-def test_qmin_matches_bruteforce(g, cm):
+def check_qmin_matches_bruteforce(g, cm):
     assert q_min(g, cm) == pytest.approx(q_min_bruteforce(g, cm), rel=1e-9, abs=1e-12)
 
 
-@settings(max_examples=40, deadline=None)
-@given(task_graphs(), cost_models())
-def test_feasibility_boundary(g, cm):
+def check_feasibility_boundary(g, cm):
     qmn = q_min(g, cm)
     # feasible exactly at Q_min
     p = optimal_partition(g, cm, qmn)
@@ -110,9 +77,7 @@ def test_feasibility_boundary(g, cm):
             optimal_partition(g, cm, qmn * 0.99 - 1e-12)
 
 
-@settings(max_examples=40, deadline=None)
-@given(task_graphs(), cost_models())
-def test_monotonicity_in_qmax(g, cm):
+def check_monotonicity_in_qmax(g, cm):
     qmn = q_min(g, cm)
     whole = whole_app_partition(g, cm).e_total
     qs = np.linspace(qmn, max(whole, qmn) * 1.01, 8)
@@ -126,18 +91,14 @@ def test_monotonicity_in_qmax(g, cm):
     assert max(nb) <= parts[0].n_bursts
 
 
-@settings(max_examples=30, deadline=None)
-@given(task_graphs(), cost_models())
-def test_unbounded_is_whole_app_when_no_keep_cost(g, cm):
-    # With no Q_max the optimum can never beat the whole-app burst minus...
-    # it IS at most the whole-app cost (one burst is always a candidate).
+def check_unbounded_at_most_whole_app(g, cm):
+    # With no Q_max the optimum is at most the whole-app cost (one burst is
+    # always a candidate).
     p = optimal_partition(g, cm, None)
     assert p.e_total <= whole_app_partition(g, cm).e_total + 1e-12
 
 
-@settings(max_examples=30, deadline=None)
-@given(task_graphs(), cost_models())
-def test_optimal_beats_baselines(g, cm):
+def check_optimal_beats_baselines(g, cm):
     qmn = q_min(g, cm)
     p = optimal_partition(g, cm, None)
     st_ = single_task_partition(g, cm, naive_state_retention=True)
@@ -147,6 +108,125 @@ def test_optimal_beats_baselines(g, cm):
     # dependency-optimized single-task is also a valid partition → optimum ≤ it
     if st2.max_burst <= qmn * (1 + 1e-9):
         assert p2.e_total <= st2.e_total + 1e-9
+
+
+# -- driver 1: stdlib-random fallback (always runs) ----------------------------
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_dp_equals_bruteforce_and_dijkstra(seed):
+    rng = random.Random(seed)
+    check_dp_equals_bruteforce_and_dijkstra(
+        random_task_graph(rng), random_cost_model(rng), rng.uniform(0.0, 3.0)
+    )
+
+
+@pytest.mark.parametrize("seed", range(40))
+def test_qmin_matches_bruteforce(seed):
+    rng = random.Random(1000 + seed)
+    check_qmin_matches_bruteforce(random_task_graph(rng), random_cost_model(rng))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_feasibility_boundary(seed):
+    rng = random.Random(2000 + seed)
+    check_feasibility_boundary(random_task_graph(rng), random_cost_model(rng))
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_monotonicity_in_qmax(seed):
+    rng = random.Random(3000 + seed)
+    check_monotonicity_in_qmax(random_task_graph(rng), random_cost_model(rng))
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_unbounded_at_most_whole_app(seed):
+    rng = random.Random(4000 + seed)
+    check_unbounded_at_most_whole_app(random_task_graph(rng), random_cost_model(rng))
+
+
+@pytest.mark.parametrize("seed", range(15))
+def test_optimal_beats_baselines(seed):
+    rng = random.Random(5000 + seed)
+    check_optimal_beats_baselines(random_task_graph(rng), random_cost_model(rng))
+
+
+# -- driver 2: hypothesis fuzzing (when installed) -----------------------------
+
+if HAVE_HYPOTHESIS:
+
+    @st.composite
+    def task_graphs(draw, max_tasks=9):
+        n = draw(st.integers(1, max_tasks))
+        n_ext = draw(st.integers(0, 2))
+        b = GraphBuilder()
+        avail = []
+        for i in range(n_ext):
+            b.packet(f"e{i}", draw(st.integers(1, 4000)), external=True)
+            avail.append(f"e{i}")
+        for t in range(n):
+            n_reads = draw(st.integers(0, min(3, len(avail))))
+            reads = draw(
+                st.lists(st.sampled_from(avail), min_size=n_reads,
+                         max_size=n_reads, unique=True)
+            ) if avail else []
+            n_writes = draw(st.integers(0, 2))
+            writes = []
+            for w in range(n_writes):
+                name = f"p{t}_{w}"
+                b.packet(name, draw(st.integers(1, 4000)),
+                         keep=draw(st.booleans()))
+                writes.append(name)
+            b.task(f"t{t}", reads=tuple(reads), writes=tuple(writes),
+                   cost=draw(st.floats(0.01, 10.0, allow_nan=False)))
+            avail.extend(writes)
+        return b.build()
+
+    @st.composite
+    def cost_models(draw):
+        from repro.core import CostModel, LinearTransfer
+
+        return CostModel(
+            e_startup=draw(st.floats(0, 1.0)),
+            read=LinearTransfer(draw(st.floats(0, 0.1)), draw(st.floats(0, 1e-3))),
+            write=LinearTransfer(draw(st.floats(0, 0.1)), draw(st.floats(0, 1e-3))),
+        )
+
+    class TestHypothesisFuzz:
+        @settings(max_examples=60, deadline=None)
+        @given(task_graphs(), cost_models(), st.floats(0.0, 3.0))
+        def test_dp_equals_bruteforce_and_dijkstra(self, g, cm, qscale):
+            check_dp_equals_bruteforce_and_dijkstra(g, cm, qscale)
+
+        @settings(max_examples=60, deadline=None)
+        @given(task_graphs(), cost_models())
+        def test_qmin_matches_bruteforce(self, g, cm):
+            check_qmin_matches_bruteforce(g, cm)
+
+        @settings(max_examples=40, deadline=None)
+        @given(task_graphs(), cost_models())
+        def test_feasibility_boundary(self, g, cm):
+            check_feasibility_boundary(g, cm)
+
+        @settings(max_examples=40, deadline=None)
+        @given(task_graphs(), cost_models())
+        def test_monotonicity_in_qmax(self, g, cm):
+            check_monotonicity_in_qmax(g, cm)
+
+        @settings(max_examples=30, deadline=None)
+        @given(task_graphs(), cost_models())
+        def test_unbounded_at_most_whole_app(self, g, cm):
+            check_unbounded_at_most_whole_app(g, cm)
+
+        @settings(max_examples=30, deadline=None)
+        @given(task_graphs(), cost_models())
+        def test_optimal_beats_baselines(self, g, cm):
+            check_optimal_beats_baselines(g, cm)
+
+else:
+
+    def test_hypothesis_fuzz_skipped_without_hypothesis():
+        pytest.importorskip("hypothesis")
 
 
 # -- deterministic regressions -------------------------------------------------

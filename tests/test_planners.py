@@ -1,9 +1,16 @@
 """Julienne-planner tests: pipeline / offload / remat over the model zoo,
-plus optimal_partition_k invariants (hypothesis)."""
+plus optimal_partition_k invariants.
+
+The partition-k properties are plain ``check_*`` functions driven by a
+stdlib-``random`` seed parametrization (always runs) and additionally by
+hypothesis when it is installed (``pytest.importorskip`` semantics — the
+fuzz class simply does not exist without it).
+"""
+
+import random
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 from repro.configs import REGISTRY
 from repro.core import (GraphBuilder, Infeasible, PAPER_FRAM_MODEL,
@@ -12,6 +19,13 @@ from repro.core.layer_profile import build_activation_graph, profile_model
 from repro.core.offload import min_activation_budget, plan_offload
 from repro.core.pipeline import plan_pipeline
 from repro.core.remat_policy import plan_remat, segments_for_scan
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def chain_graph(costs, nbytes=1000):
@@ -24,34 +38,43 @@ def chain_graph(costs, nbytes=1000):
     return b.build()
 
 
-class TestPartitionK:
-    @settings(max_examples=40, deadline=None)
-    @given(st.lists(st.floats(0.1, 5.0), min_size=2, max_size=10),
-           st.integers(1, 5))
-    def test_k_bursts_exact_count(self, costs, k):
-        if k > len(costs):
-            k = len(costs)
-        g = chain_graph(costs)
-        p = optimal_partition_k(g, PAPER_FRAM_MODEL, k)
-        assert p.n_bursts == k
-        p.validate(g)
+def check_k_bursts_exact_count(costs, k):
+    if k > len(costs):
+        k = len(costs)
+    g = chain_graph(costs)
+    p = optimal_partition_k(g, PAPER_FRAM_MODEL, k)
+    assert p.n_bursts == k
+    p.validate(g)
 
-    @settings(max_examples=30, deadline=None)
-    @given(st.lists(st.floats(0.1, 5.0), min_size=3, max_size=9))
-    def test_minimax_beats_uniform_split(self, costs):
-        g = chain_graph(costs)
-        k = 3 if len(costs) >= 3 else len(costs)
-        p = optimal_partition_k(g, PAPER_FRAM_MODEL, k, objective="max")
-        # uniform split is a candidate → optimum bottleneck ≤ its bottleneck
-        n = len(costs)
-        bounds, start = [], 1
-        for s in range(k):
-            end = (s + 1) * n // k
-            bounds.append((start, end))
-            start = end + 1
-        from repro.core.burst import burst_cost
-        uniform_max = max(burst_cost(g, PAPER_FRAM_MODEL, i, j) for i, j in bounds)
-        assert p.max_burst <= uniform_max + 1e-9
+
+def check_minimax_beats_uniform_split(costs):
+    g = chain_graph(costs)
+    k = 3 if len(costs) >= 3 else len(costs)
+    p = optimal_partition_k(g, PAPER_FRAM_MODEL, k, objective="max")
+    # uniform split is a candidate → optimum bottleneck ≤ its bottleneck
+    n = len(costs)
+    bounds, start = [], 1
+    for s in range(k):
+        end = (s + 1) * n // k
+        bounds.append((start, end))
+        start = end + 1
+    from repro.core.burst import burst_cost
+    uniform_max = max(burst_cost(g, PAPER_FRAM_MODEL, i, j) for i, j in bounds)
+    assert p.max_burst <= uniform_max + 1e-9
+
+
+class TestPartitionK:
+    @pytest.mark.parametrize("seed", range(30))
+    def test_k_bursts_exact_count(self, seed):
+        rng = random.Random(seed)
+        costs = [rng.uniform(0.1, 5.0) for _ in range(rng.randint(2, 10))]
+        check_k_bursts_exact_count(costs, rng.randint(1, 5))
+
+    @pytest.mark.parametrize("seed", range(20))
+    def test_minimax_beats_uniform_split(self, seed):
+        rng = random.Random(100 + seed)
+        costs = [rng.uniform(0.1, 5.0) for _ in range(rng.randint(3, 9))]
+        check_minimax_beats_uniform_split(costs)
 
     def test_k_equals_brute_force(self):
         g = chain_graph([1.0, 3.0, 0.5, 2.0, 1.5])
@@ -62,6 +85,21 @@ class TestPartitionK:
             burst_cost(g, PAPER_FRAM_MODEL, 1, c) + burst_cost(g, PAPER_FRAM_MODEL, c + 1, 5)
             for c in range(1, 5))
         assert p.e_total == pytest.approx(best, rel=1e-12)
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestPartitionKFuzz:
+        @settings(max_examples=40, deadline=None)
+        @given(st.lists(st.floats(0.1, 5.0), min_size=2, max_size=10),
+               st.integers(1, 5))
+        def test_k_bursts_exact_count(self, costs, k):
+            check_k_bursts_exact_count(costs, k)
+
+        @settings(max_examples=30, deadline=None)
+        @given(st.lists(st.floats(0.1, 5.0), min_size=3, max_size=9))
+        def test_minimax_beats_uniform_split(self, costs):
+            check_minimax_beats_uniform_split(costs)
 
 
 ARCHS = ["deepseek-coder-33b", "zamba2-7b", "whisper-large-v3",

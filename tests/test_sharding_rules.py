@@ -6,18 +6,32 @@ from jax.sharding import PartitionSpec as P
 
 from repro.models.sharding import logical_to_spec, rules_for
 
-pytestmark = pytest.mark.skipif(len(jax.devices()) < 1, reason="no devices")
+try:
+    from jax.sharding import AbstractMesh
+except ImportError:  # pre-0.4.31 jax has no AbstractMesh at all
+    AbstractMesh = None
+
+pytestmark = [
+    pytest.mark.skipif(len(jax.devices()) < 1, reason="no devices"),
+    pytest.mark.skipif(AbstractMesh is None, reason="AbstractMesh unavailable"),
+]
 
 
 def fake_mesh(shape, axes):
-    """AbstractMesh stands in for a device mesh (no allocation)."""
-    from jax.sharding import AbstractMesh
+    """AbstractMesh stands in for a device mesh (no allocation).
 
-    return AbstractMesh(shape, axes)
+    The constructor signature changed across jax releases: newer versions
+    take ``(axis_sizes, axis_names)``, 0.4.x takes a single tuple of
+    ``(name, size)`` pairs. Try the new form first and fall back.
+    """
+    try:
+        return AbstractMesh(shape, axes)
+    except TypeError:
+        return AbstractMesh(tuple(zip(axes, shape)))
 
 
-SINGLE = fake_mesh((16, 16), ("data", "model"))
-MULTI = fake_mesh((2, 16, 16), ("pod", "data", "model"))
+SINGLE = fake_mesh((16, 16), ("data", "model")) if AbstractMesh else None
+MULTI = fake_mesh((2, 16, 16), ("pod", "data", "model")) if AbstractMesh else None
 
 
 class TestResolver:
