@@ -14,8 +14,16 @@ Framework tables (beyond paper):
 * julienne planners (pipeline / offload / remat) over the model zoo
 * roofline summary per (arch × shape × mesh) from experiments/dryrun/*.json
 * Pallas kernel microbenches (CPU interpret mode — correctness-path timing)
+* partition_sweep: scan vs CSR/Pallas sweep backends + export footprints
+  (also written to BENCH_partition_sweep.json)
+
+CLI: ``--section NAME`` runs one section (default: all);
+``--backend {scan,pallas,auto}`` and ``--smoke`` scope the partition_sweep
+section so CI can smoke-run a single CSR row; ``--json-out`` overrides the
+JSON path.
 """
 
+import argparse
 import glob
 import json
 import os
@@ -173,6 +181,88 @@ def partition_jax_engine():
              f"bursts@64x={len(b)}")
 
 
+def partition_sweep(backend="auto", smoke=False, json_out=None):
+    """Scan vs CSR/Pallas sweep backends (same outputs, different layouts).
+
+    Rows: export footprint on the full 5458-task head-count graph (dense
+    computed analytically — materializing it is the ~1 GB blow-up the CSR
+    layout exists to avoid), solver timings on a reduced graph where both
+    backends run, and (unless ``smoke``) the full-graph CSR solve. Results
+    are also dumped to BENCH_partition_sweep.json for trend tracking.
+    """
+    from repro.core import dense_export_nbytes, q_min as qmin_np
+    from repro.core.partition_jax import sweep_jax
+
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    def best_of(f, n=3):
+        ts = []
+        for _ in range(n):
+            t0 = time.time()
+            f()
+            ts.append(time.time() - t0)
+        return min(ts)
+
+    # Export footprint: dense (N, R) rectangles vs CSR slot arrays.
+    g_full = build_graph(THERMAL)
+    csr = g_full.to_csr_arrays()
+    r = max(len(t.reads) for t in g_full.tasks)
+    w = max(len(t.writes) for t in g_full.tasks)
+    dense_b = dense_export_nbytes(g_full.n_tasks, r, w)
+    row("partition_sweep.dense_export_MB", f"{dense_b / 1e6:.0f}",
+        f"(N,R)=({g_full.n_tasks},{r}) — never materialized")
+    row("partition_sweep.csr_export_kB", f"{csr.nbytes / 1e3:.0f}",
+        f"{csr.nnz_reads} read slots")
+    row("partition_sweep.export_ratio", f"{dense_b / csr.nbytes:.0f}",
+        "acceptance: >=50x")
+
+    # Reduced graph where the dense backend is feasible: time both.
+    g = build_graph(THERMAL.reduced(64))
+    qmn = qmin_np(g, CM)
+    qs = list(np.geomspace(qmn, g.total_task_cost() * 1.05, 64))
+    backends = ("scan", "pallas") if backend == "auto" else (backend,)
+    times = {}
+    for be in backends:
+        sweep_jax(g, CM, qs, backend=be)  # compile outside the timed region
+        times[be] = best_of(lambda be=be: sweep_jax(g, CM, qs, backend=be))
+        row(f"partition_sweep.n{g.n_tasks}.q64_{be}_ms",
+            f"{times[be] * 1e3:.1f}", "same outputs (bit-exact columns)")
+    if len(times) == 2:
+        row("partition_sweep.n90.scan_over_pallas",
+            f"{times['scan'] / times['pallas']:.2f}",
+            "dense scan vs CSR kernel at equal N")
+
+    # The full graph only exists through the CSR backend.
+    if not smoke:
+        be = "pallas" if backend == "auto" else backend
+        if be != "pallas":
+            row("partition_sweep.full.skipped", 1,
+                "scan backend cannot materialize the full graph")
+        else:
+            qs_full = [132e-3, None]
+            sweep_jax(g_full, CM, qs_full, backend="pallas")
+            t = best_of(
+                lambda: sweep_jax(g_full, CM, qs_full, backend="pallas"), n=2
+            )
+            res = sweep_jax(g_full, CM, qs_full, backend="pallas")
+            row("partition_sweep.full.q2_pallas_s", f"{t:.2f}",
+                f"{g_full.n_tasks} tasks, one fused kernel")
+            row("partition_sweep.full.bursts@132mJ",
+                len(res.bounds(0)), "paper=18")
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_partition_sweep.json"
+    )
+    with open(path, "w") as f:
+        json.dump({"backend": backend, "smoke": bool(smoke),
+                   "rows": records}, f, indent=2)
+        f.write("\n")
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -240,16 +330,40 @@ def kernel_microbench():
          "interpret mode")
 
 
-def main() -> None:
+SECTIONS = {
+    "tables": table12_energy_characterization,
+    "fig6": fig6_partitioning_comparison,
+    "design_space": fig7_fig8_design_space,
+    "scaling": optimizer_scaling,
+    "partition_jax": partition_jax_engine,
+    "partition_sweep": partition_sweep,
+    "planners": julienne_planners,
+    "roofline": roofline_summary,
+    "kernels": kernel_microbench,
+}
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--section", choices=sorted(SECTIONS), default=None,
+                    help="run one section instead of all")
+    ap.add_argument("--backend", choices=("scan", "pallas", "auto"),
+                    default="auto",
+                    help="partition_sweep: which solver backend(s) to time")
+    ap.add_argument("--smoke", action="store_true",
+                    help="partition_sweep: skip the full 5458-task solve")
+    ap.add_argument("--json-out", default=None,
+                    help="partition_sweep: override the JSON dump path")
+    args = ap.parse_args(argv)
+
     print("name,value,derived")
-    table12_energy_characterization()
-    fig6_partitioning_comparison()
-    fig7_fig8_design_space()
-    optimizer_scaling()
-    partition_jax_engine()
-    julienne_planners()
-    roofline_summary()
-    kernel_microbench()
+    sections = [args.section] if args.section else list(SECTIONS)
+    for name in sections:
+        fn = SECTIONS[name]
+        if name == "partition_sweep":
+            fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
+        else:
+            fn()
 
 
 if __name__ == "__main__":

@@ -1,0 +1,61 @@
+"""Paper reproduction at full scale: the *unreduced* head-count graphs.
+
+Solves both 5458-task applications (thermal FLIR Lepton and visual OV7670,
+Table 2) over a Q_max grid through the CSR/Pallas sweep backend — the dense
+``(N, R)`` export would be ~1 GB because the sort task reads all 5452 score
+packets, so only the compressed slot layout makes the full graph a
+single-kernel solve — and prints the paper-style energy-storage-reduction
+table (Figs. 6–8): bursts, total energy, overhead, and storage reduction
+versus the Whole-Application baseline.
+
+Run:  PYTHONPATH=src python examples/headcount_full.py
+"""
+
+import time
+
+import numpy as np
+
+from repro.core import dense_export_nbytes, q_min, whole_app_partition
+from repro.core.apps.headcount import THERMAL, VISUAL, build_graph, paper_cost_model
+from repro.core.partition_jax import _select_backend, sweep_jax
+
+cm = paper_cost_model()
+
+for spec in (THERMAL, VISUAL):
+    g = build_graph(spec)
+    csr = g.to_csr_arrays()
+    r = max(len(t.reads) for t in g.tasks)
+    w = max(len(t.writes) for t in g.tasks)
+    dense = dense_export_nbytes(g.n_tasks, r, w)
+    backend = _select_backend(g, "auto")
+    print(f"=== {spec.name}: {g.n_tasks} tasks, "
+          f"{csr.nnz_reads} read slots (max degree {r}) ===")
+    print(f"export: dense would be {dense / 1e6:.0f} MB, CSR is "
+          f"{csr.nbytes / 1e3:.0f} kB ({dense / csr.nbytes:.0f}x smaller) "
+          f"-> backend={backend}")
+
+    e_app = g.total_task_cost()
+    q_whole = whole_app_partition(g, cm).max_burst
+    qmn = q_min(g, cm)
+    qs = [qmn] + list(np.geomspace(qmn * 1.01, e_app * 1.05, 7)) + [None]
+
+    t0 = time.time()
+    res = sweep_jax(g, cm, qs)  # auto -> CSR/Pallas sweep kernel
+    dt = time.time() - t0
+    print(f"solved {len(qs)} Q points in {dt:.1f}s (one fused kernel)")
+    print(f"{'Q_max [mJ]':>12} {'bursts':>7} {'E_total [J]':>12} "
+          f"{'overhead %':>11} {'storage reduction %':>20}")
+    for qi, q in enumerate(qs):
+        if not res.feasible[qi]:
+            print(f"{(q or 0) * 1e3:12.2f} {'—':>7}  (infeasible)")
+            continue
+        b = res.bounds(qi)
+        e_tot = res.e_total[qi]
+        qv = q_whole if q is None else q
+        print(f"{'unbounded' if q is None else f'{q * 1e3:.2f}':>12} "
+              f"{len(b):7d} {e_tot:12.6f} "
+              f"{100 * (e_tot - e_app) / e_tot:11.3f} "
+              f"{100 * (1 - qv / q_whole):20.2f}")
+    print(f"paper ({spec.name}): Q_min storage reduction "
+          f"{100 * (1 - qmn / q_whole):.1f}% (paper reports >94% for thermal; "
+          f"18 bursts @ 132 mJ, 0.12% overhead)\n")

@@ -13,6 +13,7 @@ from .cost import (
     CostModel,
     LinearTransfer,
     PAPER_FRAM_MODEL,
+    cost_scalars,
     paper_fram_model,
     tpu_host_offload_model,
     tpu_pipeline_model,
@@ -21,9 +22,12 @@ from .cost import (
 from .graph import (
     GraphArrays,
     GraphBuilder,
+    GraphCSRArrays,
     Packet,
     Task,
     TaskGraph,
+    dense_export_nbytes,
+    stack_csr_arrays,
     stack_graph_arrays,
 )
 from .layer_profile import (
@@ -66,7 +70,7 @@ _JAX_EXPORTS = (
     "sweep_jax",
     "sweep_jax_batched",
     "optimal_partition_jax",
-    "cost_scalars",
+    "sweep_from_columns",
 )
 __all__ += list(_JAX_EXPORTS)
 

@@ -1,0 +1,41 @@
+"""Identity-keyed weak cache for immutable numpy-holding exports.
+
+The export dataclasses (:class:`~repro.core.graph.GraphArrays`,
+:class:`~repro.core.graph.GraphCSRArrays`) hold numpy fields, so they are
+unhashable — but they are immutable and created once per graph, so object
+identity is a sound cache key as long as id() reuse after garbage collection
+is guarded against. This helper centralizes that idiom (key by
+``id(obj) + extras``, liveness-check the stored weakref, evict on
+collection) for the engine's device-upload and padding caches.
+"""
+
+from __future__ import annotations
+
+import weakref
+from typing import Callable, Dict, Tuple, TypeVar
+
+T = TypeVar("T")
+
+__all__ = ["weak_id_cache"]
+
+
+def weak_id_cache(
+    store: Dict, obj: object, extra: Tuple, compute: Callable[[], T]
+) -> T:
+    """Return ``compute()`` memoized per live ``(obj, *extra)``.
+
+    ``store`` maps ``(id(obj), *extra) -> (weakref(obj), value)``; the entry
+    is dropped when ``obj`` is collected, and a stale id-reuse hit is
+    detected by the ``is`` liveness check.
+    """
+    key = (id(obj), *extra)
+    hit = store.get(key)
+    if hit is not None and hit[0]() is obj:
+        return hit[1]
+    value = compute()
+
+    def _evict(_ref, key=key):
+        store.pop(key, None)
+
+    store[key] = (weakref.ref(obj, _evict), value)
+    return value

@@ -15,11 +15,14 @@ from __future__ import annotations
 import dataclasses
 from typing import Optional
 
+import numpy as np
+
 from .graph import Packet
 
 __all__ = [
     "LinearTransfer",
     "CostModel",
+    "cost_scalars",
     "PAPER_FRAM_MODEL",
     "paper_fram_model",
     "tpu_host_offload_model",
@@ -56,6 +59,20 @@ class CostModel:
 
     def e_w(self, p: Packet) -> float:
         return self.write(p)
+
+
+def cost_scalars(cost: CostModel) -> np.ndarray:
+    """(E_s, read c0, read c1, write c0, write c1) as a float64 vector.
+
+    The array form the jitted engines consume (see
+    :mod:`repro.core.partition_jax` and
+    :mod:`repro.kernels.partition_sweep`): graph exports stay
+    cost-model-independent and the five scalars are applied at solve time.
+    """
+    return np.array(
+        [cost.e_startup, cost.read.c0, cost.read.c1, cost.write.c0, cost.write.c1],
+        dtype=np.float64,
+    )
 
 
 # ---------------------------------------------------------------------------

@@ -28,7 +28,8 @@ from typing import Any, Callable, Dict, Iterable, List, Mapping, Optional, Seque
 import numpy as np
 
 __all__ = ["Packet", "Task", "TaskGraph", "GraphBuilder", "GraphArrays",
-           "stack_graph_arrays"]
+           "GraphCSRArrays", "stack_graph_arrays", "stack_csr_arrays",
+           "dense_export_nbytes"]
 
 
 @dataclasses.dataclass(frozen=True)
@@ -153,6 +154,138 @@ class GraphArrays:
             write_linf=pad(self.write_linf, n_pad, w_pad),
             write_valid=pad(self.write_valid, n_pad, w_pad),
         )
+
+
+def dense_export_nbytes(n_tasks: int, r_slots: int, w_slots: int) -> int:
+    """Bytes :meth:`TaskGraph.to_arrays` would materialize, without building it.
+
+    Used by the engine's ``backend="auto"`` policy and the benchmarks: on the
+    full head-count graph the ``(N, R)`` rectangle alone is ~238 MB of float64
+    (R ≈ 5452 because the sort task reads every score packet), which is why
+    skewed-degree graphs route to the CSR export instead.
+    """
+    n, r, w = int(n_tasks), int(r_slots), int(w_slots)
+    f64 = 8 * (n + 3 * n * r + 3 * n * w)  # e_task; read/write bytes,c0w,valid
+    i32 = 4 * (3 * n * r + n * w)          # read lt,writer,linf; write linf
+    return f64 + i32
+
+
+@dataclasses.dataclass(frozen=True)
+class GraphCSRArrays:
+    """Compressed (CSR-style) slot export of a :class:`TaskGraph`.
+
+    Same per-slot quantities as :class:`GraphArrays`, but the ``(N, R)`` /
+    ``(N, W)`` rectangles are flattened task-major into flat slot arrays with
+    row pointers: task ``j`` (1-based) owns read slots
+    ``read_ptr[j-1]:read_ptr[j]`` and write slots
+    ``write_ptr[j-1]:write_ptr[j]``, in declaration order. Export size is
+    O(n_tasks + nnz) instead of O(n_tasks × max_degree) — the full 5458-task
+    head-count graph (whose sort task reads 5452 score packets and would
+    force a ~1 GB dense export) compresses to ~400 kB.
+
+    This is the feed for the Pallas sweep kernel
+    (:mod:`repro.kernels.partition_sweep`): the issue's ``slot_task_ptr`` /
+    ``slot_cost`` / ``slot_lt`` / ``slot_writer`` / ``slot_linf`` operands are
+    ``read_ptr`` plus the per-slot arrays below, with byte counts turned into
+    costs at solve time (the export stays cost-model-independent, exactly
+    like :class:`GraphArrays`).
+
+    Padding is CSR-natural: extra ``e_task`` rows carry pointer ``nnz`` (no
+    slots), and padded slot entries are never addressed by any pointer range,
+    so padded graphs solve identically — that is what
+    :func:`stack_csr_arrays` relies on.
+    """
+
+    n_tasks: int
+    e_task: np.ndarray        # (N,)      f64  task execution cost, 0-padded
+    read_ptr: np.ndarray      # (N+1,)    i32  row pointers into the read slots
+    read_bytes: np.ndarray    # (nnz_r,)  f64  |p| per read slot
+    read_c0w: np.ndarray      # (nnz_r,)  f64  c0_weight per read slot
+    read_lt: np.ndarray       # (nnz_r,)  i32  l_j(p): last touch strictly before j
+    read_writer: np.ndarray   # (nnz_r,)  i32  writer(p) (0 = external)
+    read_linf: np.ndarray     # (nnz_r,)  i32  l_∞(p) of the read packet
+    write_ptr: np.ndarray     # (N+1,)    i32  row pointers into the write slots
+    write_bytes: np.ndarray   # (nnz_w,)  f64
+    write_c0w: np.ndarray     # (nnz_w,)  f64
+    write_linf: np.ndarray    # (nnz_w,)  i32
+
+    @property
+    def n_pad(self) -> int:
+        return int(self.e_task.shape[-1])
+
+    @property
+    def nnz_reads(self) -> int:
+        return int(self.read_bytes.shape[-1])
+
+    @property
+    def nnz_writes(self) -> int:
+        return int(self.write_bytes.shape[-1])
+
+    @property
+    def nbytes(self) -> int:
+        """Total bytes of the export (benchmarked against the dense path)."""
+        return int(
+            sum(
+                getattr(self, f.name).nbytes
+                for f in dataclasses.fields(self)
+                if f.name != "n_tasks"
+            )
+        )
+
+    def padded(self, n_pad: int, r_pad: int, w_pad: int) -> "GraphCSRArrays":
+        """Re-pad to a (larger) common (N, nnz_r, nnz_w), for batching."""
+        if n_pad < self.n_pad or r_pad < self.nnz_reads or w_pad < self.nnz_writes:
+            raise ValueError(
+                f"cannot shrink padding {(self.n_pad, self.nnz_reads, self.nnz_writes)} "
+                f"to {(n_pad, r_pad, w_pad)}"
+            )
+
+        def pad_ptr(ptr: np.ndarray) -> np.ndarray:
+            return np.pad(ptr, (0, n_pad - self.n_pad), mode="edge")
+
+        def pad1(a: np.ndarray, target: int) -> np.ndarray:
+            return np.pad(a, (0, target - a.shape[0]))
+
+        return GraphCSRArrays(
+            n_tasks=self.n_tasks,
+            e_task=pad1(self.e_task, n_pad),
+            read_ptr=pad_ptr(self.read_ptr),
+            read_bytes=pad1(self.read_bytes, r_pad),
+            read_c0w=pad1(self.read_c0w, r_pad),
+            read_lt=pad1(self.read_lt, r_pad),
+            read_writer=pad1(self.read_writer, r_pad),
+            read_linf=pad1(self.read_linf, r_pad),
+            write_ptr=pad_ptr(self.write_ptr),
+            write_bytes=pad1(self.write_bytes, w_pad),
+            write_c0w=pad1(self.write_c0w, w_pad),
+            write_linf=pad1(self.write_linf, w_pad),
+        )
+
+
+def stack_csr_arrays(arrays: Sequence[GraphCSRArrays]) -> GraphCSRArrays:
+    """Stack CSR exports of different graphs into one batch (leading axis B).
+
+    All arrays re-pad to the largest (N, nnz_r, nnz_w) in the batch;
+    ``n_tasks`` becomes a ``(B,)`` int array. Mirrors
+    :func:`stack_graph_arrays` for the compressed layout — this is what
+    :func:`repro.core.partition_jax.sweep_jax_batched` feeds the Pallas
+    backend (one compiled kernel serves every graph in the batch).
+    """
+    if not arrays:
+        raise ValueError("empty batch")
+    n = max(a.n_pad for a in arrays)
+    r = max(max(a.nnz_reads for a in arrays), 1)
+    w = max(max(a.nnz_writes for a in arrays), 1)
+    padded = [a.padded(n, r, w) for a in arrays]
+    fields = {
+        f.name: np.stack([getattr(a, f.name) for a in padded])
+        for f in dataclasses.fields(GraphCSRArrays)
+        if f.name != "n_tasks"
+    }
+    return GraphCSRArrays(
+        n_tasks=np.array([a.n_tasks for a in arrays], dtype=np.int32),  # type: ignore[arg-type]
+        **fields,
+    )
 
 
 def stack_graph_arrays(arrays: Sequence[GraphArrays]) -> GraphArrays:
@@ -378,6 +511,75 @@ class TaskGraph:
         )
         if n_pad is None and r_pad is None and w_pad is None:
             self._arrays_cache = out  # graphs are immutable once built
+        return out
+
+    def to_csr_arrays(
+        self,
+        n_pad: Optional[int] = None,
+        r_pad: Optional[int] = None,
+        w_pad: Optional[int] = None,
+    ) -> GraphCSRArrays:
+        """Export the §4.2 analysis products in the compressed slot layout.
+
+        Semantics match :meth:`to_arrays` slot-for-slot (same per-task
+        ordering, so the two exports are mutually reconstructible); only the
+        container changes from padded rectangles to flat arrays + row
+        pointers. ``n_pad``/``r_pad``/``w_pad`` grow the task count and the
+        read/write slot pools for cross-graph batching (must be ≥ natural).
+        """
+        if n_pad is None and r_pad is None and w_pad is None:
+            cached = getattr(self, "_csr_cache", None)
+            if cached is not None:
+                return cached
+        n = self.n_tasks
+        r_ptr = [0]
+        rb: List[float] = []
+        rc0: List[float] = []
+        rlt: List[int] = []
+        rwr: List[int] = []
+        rli: List[int] = []
+        w_ptr = [0]
+        wb: List[float] = []
+        wc0: List[float] = []
+        wli: List[int] = []
+        for idx, t in enumerate(self.tasks):
+            for name, lt in zip(t.reads, self.read_last_touch[idx]):
+                p = self.packets[name]
+                rb.append(p.nbytes)
+                rc0.append(p.c0_weight)
+                rlt.append(lt)
+                rwr.append(self._writer[name])
+                rli.append(self.l_inf[name])
+            r_ptr.append(len(rb))
+            for name in t.writes:
+                p = self.packets[name]
+                wb.append(p.nbytes)
+                wc0.append(p.c0_weight)
+                wli.append(self.l_inf[name])
+            w_ptr.append(len(wb))
+
+        out = GraphCSRArrays(
+            n_tasks=n,
+            e_task=np.array([t.cost for t in self.tasks], dtype=np.float64),
+            read_ptr=np.array(r_ptr, dtype=np.int32),
+            read_bytes=np.array(rb, dtype=np.float64),
+            read_c0w=np.array(rc0, dtype=np.float64),
+            read_lt=np.array(rlt, dtype=np.int32),
+            read_writer=np.array(rwr, dtype=np.int32),
+            read_linf=np.array(rli, dtype=np.int32),
+            write_ptr=np.array(w_ptr, dtype=np.int32),
+            write_bytes=np.array(wb, dtype=np.float64),
+            write_c0w=np.array(wc0, dtype=np.float64),
+            write_linf=np.array(wli, dtype=np.int32),
+        )
+        if n_pad is not None or r_pad is not None or w_pad is not None:
+            out = out.padded(
+                n if n_pad is None else int(n_pad),
+                max(len(rb) if r_pad is None else int(r_pad), 1),
+                max(len(wb) if w_pad is None else int(w_pad), 1),
+            )
+        else:
+            self._csr_cache = out  # graphs are immutable once built
         return out
 
     def __repr__(self) -> str:  # pragma: no cover

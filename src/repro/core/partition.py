@@ -33,6 +33,8 @@ from .cost import CostModel
 from .graph import TaskGraph
 
 __all__ = [
+    "BUDGET_REL",
+    "BUDGET_ABS",
     "Partition",
     "Infeasible",
     "optimal_partition",
@@ -50,6 +52,20 @@ __all__ = [
 
 class Infeasible(ValueError):
     """No partition satisfies the Q_max bound (Q_max < Q_min)."""
+
+
+# Budget tolerance: incremental columns accumulate in a different order than
+# the reference burst model, so exactly-at-budget bursts may sit a few ulp
+# above Q_max. Single source of truth for every solver path — the numpy DP,
+# Dijkstra, brute force, the jitted scan engine (partition_jax) and the
+# CSR/Pallas sweep kernel (kernels/partition_sweep) all import these, which
+# the cross-backend bit-equality guarantees depend on.
+BUDGET_REL = 1e-9
+BUDGET_ABS = 1e-12
+
+
+def _within_budget(value, q) -> bool:
+    return value <= q * (1 + BUDGET_REL) + BUDGET_ABS
 
 
 @dataclasses.dataclass
@@ -112,7 +128,7 @@ class Partition:
             raise AssertionError("partition does not cover all tasks")
         if self.q_max is not None:
             for b in self.bursts:
-                if b.total > self.q_max * (1 + 1e-9) + 1e-12:
+                if not _within_budget(b.total, self.q_max):
                     raise AssertionError(
                         f"burst ⟨{b.i},{b.j}⟩ cost {b.total} exceeds Q_max {self.q_max}"
                     )
@@ -182,10 +198,7 @@ def optimal_partition_multi(
     for j, col in zip(range(1, n + 1), ColumnSweep(graph, cost)):
         c = col[1 : j + 1]  # c[k] = E⟨k+1, j⟩, k = 0..j-1
         cand = dp[:, 0:j] + c[None, :]
-        # Relative tolerance: the incremental column accumulates in a different
-        # order than the reference model, so exactly-at-budget bursts may be a
-        # few ulp above Q_max.
-        cand[c[None, :] > qs[:, None] * (1 + 1e-9) + 1e-12] = np.inf
+        cand[c[None, :] > qs[:, None] * (1 + BUDGET_REL) + BUDGET_ABS] = np.inf
         best = np.argmin(cand, axis=1)
         dp[:, j] = cand[np.arange(nq), best]
         parent[:, j] = best + 1
@@ -229,7 +242,7 @@ def optimal_partition_k(
     parent = np.zeros((n_bursts + 1, n + 1), dtype=np.int64)
     for j, col in zip(range(1, n + 1), ColumnSweep(graph, cost)):
         c = col[1 : j + 1].copy()          # c[k] = E⟨k+1, j⟩
-        c[c > q * (1 + 1e-9) + 1e-12] = np.inf
+        c[c > q * (1 + BUDGET_REL) + BUDGET_ABS] = np.inf
         for b in range(1, n_bursts + 1):
             cand = combine(dp[b - 1, 0:j], c)
             best = int(np.argmin(cand))
@@ -274,10 +287,10 @@ def dijkstra_partition(
         lower = cost.e_startup
         for j in range(i, n + 1):
             lower += graph.task(j).cost
-            if prune and lower > q * (1 + 1e-9) + 1e-12:
+            if prune and not _within_budget(lower, q):
                 break
             e = burst_cost(graph, cost, i, j)
-            if e <= q * (1 + 1e-9) + 1e-12:
+            if _within_budget(e, q):
                 edges[i - 1].append((j, e))
     dist = np.full(n + 1, np.inf)
     parent = np.zeros(n + 1, dtype=np.int64)
@@ -321,7 +334,7 @@ def brute_force_partition(
                 start = b + 1
         bounds.append((start, n))
         part = _partition_from_bounds(graph, cost, bounds, q_max)
-        if part.max_burst > q * (1 + 1e-9) + 1e-12:
+        if not _within_budget(part.max_burst, q):
             continue
         if best is None or part.e_total < best.e_total:
             best = part

@@ -15,6 +15,28 @@ A second ``vmap`` layer batches across *graphs*: :func:`sweep_jax_batched`
 takes padded exports of different applications (the whole model zoo, lowered
 via :func:`repro.core.layer_profile.lower_config`) and solves them together.
 
+Two interchangeable backends drive the same host API (``backend=`` on
+:func:`sweep_jax` / :func:`sweep_jax_batched` / :func:`optimal_partition_jax`):
+
+* ``"scan"`` — the ``lax.scan`` engine below over the dense
+  :meth:`TaskGraph.to_arrays` export. Best for Q-grid-heavy DSE on graphs
+  whose read degree is bounded (the padded ``(N, R)`` rectangle stays small).
+* ``"pallas"`` — the fused column-sweep/DP kernel in
+  :mod:`repro.kernels.partition_sweep` over the compressed
+  :meth:`TaskGraph.to_csr_arrays` export. Required for skewed-degree graphs:
+  the full 5458-task head-count application has R ≈ 5452 (its sort task reads
+  every score packet), which would dense-export ~1 GB; the CSR slot layout is
+  ~400 kB and the kernel applies slot contributions in-register.
+* ``"auto"`` (default) — picks "pallas" when the dense export would exceed
+  ``_AUTO_DENSE_BYTES`` (or when handed a ``GraphCSRArrays``), else "scan".
+
+Serving-path behavior (ROADMAP "hoist dtype handling"): graph uploads are
+device-cached per export object, cost scalars per cost model, and both
+backends' jitted callables are shape-keyed — so a serving loop re-solving the
+same application across Q grids does no per-request re-trace, re-upload, or
+global-config churn beyond the thread-local ``enable_x64`` flag entered once
+per call (asserted by the no-retrace test in tests/test_partition_sweep.py).
+
 The per-column recurrence, identical to :mod:`.burst` (all 1-based):
 
     E⟨i,j⟩ = E⟨i,j-1⟩ + E_task(j) + S(j)
@@ -38,6 +60,7 @@ cost vectors.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import List, Optional, Sequence, Tuple, Union
 
 import numpy as np
@@ -47,35 +70,48 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import enable_x64
 
-from .cost import CostModel
-from .graph import GraphArrays, TaskGraph, stack_graph_arrays
-from .partition import Infeasible, Partition, _partition_from_bounds
+from ._cache import weak_id_cache
+from .cost import CostModel, cost_scalars
+from .graph import (
+    GraphArrays,
+    GraphCSRArrays,
+    TaskGraph,
+    dense_export_nbytes,
+    stack_graph_arrays,
+)
+from .partition import (
+    BUDGET_ABS,
+    BUDGET_REL,
+    Infeasible,
+    Partition,
+    _partition_from_bounds,
+)
 
 __all__ = [
     "JaxSweep",
     "sweep_jax",
     "sweep_jax_batched",
     "optimal_partition_jax",
+    "sweep_from_columns",
     "cost_scalars",
 ]
 
-# Same budget tolerance as the numpy DP (see partition.py): columns accumulate
-# in a different order than the reference model, so exactly-at-budget bursts
-# may sit a few ulp above Q_max.
-_REL = 1e-9
-_ABS = 1e-12
+# Budget tolerance: the single source of truth lives in partition.py
+# (BUDGET_REL/BUDGET_ABS) so every solver path masks identically.
+_REL = BUDGET_REL
+_ABS = BUDGET_ABS
 
-# Read-slot count above which the column update switches from the
-# order-preserving unrolled loop to one masked 2-D reduction.
+# Read-slot count above which the scan backend's column update switches from
+# the order-preserving unrolled loop to one masked 2-D reduction.
 _UNROLL_MAX = 8
 
+# backend="auto": route to the CSR/Pallas backend once the dense export would
+# cross this size (the full head-count graph is ~1 GB dense, ~400 kB CSR).
+_AUTO_DENSE_BYTES = 32 << 20
 
-def cost_scalars(cost: CostModel) -> np.ndarray:
-    """(E_s, read c0, read c1, write c0, write c1) as a float64 vector."""
-    return np.array(
-        [cost.e_startup, cost.read.c0, cost.read.c1, cost.write.c0, cost.write.c1],
-        dtype=np.float64,
-    )
+# Trace-count regression hooks (incremented at trace time only; see the
+# no-retrace test in tests/test_partition_sweep.py).
+TRACE_COUNT = {"dp_sweep": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -90,6 +126,7 @@ def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
     (N,), (N,R), (N,W); ``n_tasks`` is a traced scalar (≤ N); ``qs`` is the
     (nq,) Q_max grid. Returns (dp, parent, e_total, feasible, starts).
     """
+    TRACE_COUNT["dp_sweep"] += 1
     e_s, r_c0, r_c1, w_c0, w_c1 = (cost_vec[k] for k in range(5))
     N = ga["e_task"].shape[0]
     R = ga["read_bytes"].shape[1]
@@ -278,16 +315,77 @@ class JaxSweep:
         return out
 
 
-def _as_arrays(graph: Union[TaskGraph, GraphArrays]) -> GraphArrays:
+AnyExport = Union[TaskGraph, GraphArrays, GraphCSRArrays]
+
+
+def _as_arrays(graph: AnyExport) -> GraphArrays:
+    if isinstance(graph, GraphCSRArrays):
+        raise TypeError(
+            "the scan backend consumes dense GraphArrays; pass the TaskGraph "
+            "or use backend='pallas' for a GraphCSRArrays export"
+        )
     return graph.to_arrays() if isinstance(graph, TaskGraph) else graph
 
 
+def _as_csr(graph: AnyExport) -> GraphCSRArrays:
+    if isinstance(graph, GraphArrays):
+        raise TypeError(
+            "the pallas backend consumes GraphCSRArrays; pass the TaskGraph "
+            "or use backend='scan' for a dense GraphArrays export"
+        )
+    return graph.to_csr_arrays() if isinstance(graph, TaskGraph) else graph
+
+
+def _select_backend(graph: AnyExport, backend: str) -> str:
+    """Resolve ``backend="auto"`` per graph (see module docstring)."""
+    if backend in ("scan", "pallas"):
+        return backend
+    if backend != "auto":
+        raise ValueError(f"unknown backend {backend!r}")
+    if isinstance(graph, GraphCSRArrays):
+        return "pallas"
+    if isinstance(graph, GraphArrays):
+        return "scan"
+    n = graph.n_tasks
+    r = max((len(t.reads) for t in graph.tasks), default=0)
+    w = max((len(t.writes) for t in graph.tasks), default=0)
+    return "pallas" if dense_export_nbytes(n, r, w) > _AUTO_DENSE_BYTES else "scan"
+
+
+# Serving-path upload caches (see core/_cache.py for the id+weakref idiom):
+# jnp copies of an export, and re-padded CSR rows, are cached per source
+# export object — TaskGraph.to_arrays()/to_csr_arrays() return a cached
+# object per graph, so a serving loop hits these across requests, and the
+# kernel wrapper's own id-keyed device cache (kernels/partition_sweep/ops.py)
+# then sees stable objects too.
+_GA_DEVICE_CACHE: dict = {}
+_CSR_PAD_CACHE: dict = {}
+
+
+def _padded_csr(a: GraphCSRArrays, n: int, r: int, w: int) -> GraphCSRArrays:
+    if (a.n_pad, a.nnz_reads, a.nnz_writes) == (n, r, w):
+        return a
+    return weak_id_cache(
+        _CSR_PAD_CACHE, a, (n, r, w), lambda: a.padded(n, r, w)
+    )
+
+
 def _ga_dict(arrays: GraphArrays) -> dict:
-    return {
-        f.name: jnp.asarray(getattr(arrays, f.name))
-        for f in dataclasses.fields(GraphArrays)
-        if f.name != "n_tasks"
-    }
+    return weak_id_cache(
+        _GA_DEVICE_CACHE,
+        arrays,
+        (),
+        lambda: {
+            f.name: jnp.asarray(getattr(arrays, f.name))
+            for f in dataclasses.fields(GraphArrays)
+            if f.name != "n_tasks"
+        },
+    )
+
+
+@functools.lru_cache(maxsize=None)
+def _cost_vec(cost: CostModel):
+    return jnp.asarray(cost_scalars(cost))
 
 
 def _qs_array(q_values: Sequence[Optional[float]]) -> np.ndarray:
@@ -309,10 +407,67 @@ def _empty_sweep(q_values: Sequence[Optional[float]]) -> JaxSweep:
     )
 
 
-def sweep_jax(
-    graph: Union[TaskGraph, GraphArrays],
+def sweep_from_columns(
+    n_tasks: int,
+    q_values: Sequence[Optional[float]],
+    mns: np.ndarray,
+    bests: np.ndarray,
+) -> JaxSweep:
+    """Assemble a :class:`JaxSweep` from per-column DP tables.
+
+    ``mns[j-1, q]`` = dp[q, j] and ``bests[j-1, q]`` = start of the last
+    burst achieving it — the convention emitted by the Pallas sweep kernel
+    (:mod:`repro.kernels.partition_sweep`) and its numpy CSR oracle. The
+    numpy parent-walk here produces bit-identical bounds to the scan
+    backend's in-jit reconstruction.
+    """
+    N, nq = mns.shape
+    dp = np.concatenate([np.zeros((nq, 1)), mns.T], axis=1)
+    parent = np.zeros((nq, N + 1), dtype=np.int32)
+    parent[:, 1:] = bests.T
+    e_total = mns[n_tasks - 1].copy() if n_tasks >= 1 else np.zeros(nq)
+    feasible = np.isfinite(e_total)
+    starts = np.zeros((nq, N + 1), dtype=bool)
+    for qi in range(nq):
+        if not feasible[qi]:
+            continue
+        j = n_tasks
+        while j > 0:
+            i = int(parent[qi, j])
+            starts[qi, i] = True
+            j = i - 1
+    return JaxSweep(
+        n_tasks=int(n_tasks),
+        q_values=list(q_values),
+        dp=dp,
+        parent=parent,
+        e_total=e_total,
+        feasible=feasible,
+        starts=starts,
+    )
+
+
+def _sweep_pallas(
+    csr: GraphCSRArrays,
     cost: CostModel,
     q_values: Sequence[Optional[float]],
+    interpret: Optional[bool],
+) -> JaxSweep:
+    from ..kernels.partition_sweep import ops as sweep_ops  # lazy: jax-heavy
+
+    mns, bests = sweep_ops.sweep_columns(
+        csr, cost, q_values, interpret=interpret
+    )
+    return sweep_from_columns(csr.n_tasks, q_values, mns, bests)
+
+
+def sweep_jax(
+    graph: AnyExport,
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
 ) -> JaxSweep:
     """One jitted pass: optimal E_total + bounds for every Q_max in the grid.
 
@@ -320,7 +475,18 @@ def sweep_jax(
     ``optimal_partition_multi`` — infeasible Q values come back with
     ``feasible == False`` instead of None. An empty graph is trivially
     feasible everywhere (matching the numpy path).
+
+    ``backend`` selects the dense ``lax.scan`` engine, the CSR/Pallas sweep
+    kernel, or lets ``"auto"`` route by dense-export size (module
+    docstring); ``interpret`` is forwarded to the Pallas backend (``None``
+    auto-selects interpret mode on CPU).
     """
+    backend = _select_backend(graph, backend)
+    if backend == "pallas":
+        csr = _as_csr(graph)
+        if csr.n_tasks == 0:
+            return _empty_sweep(q_values)
+        return _sweep_pallas(csr, cost, q_values, interpret)
     arrays = _as_arrays(graph)
     if arrays.n_tasks == 0:
         return _empty_sweep(q_values)
@@ -328,7 +494,7 @@ def sweep_jax(
         dp, parent, e_total, feasible, starts = _dp_sweep_jit(
             _ga_dict(arrays),
             jnp.asarray(arrays.n_tasks, dtype=jnp.int32),
-            jnp.asarray(cost_scalars(cost)),
+            _cost_vec(cost),
             jnp.asarray(_qs_array(q_values)),
         )
         return JaxSweep(
@@ -343,19 +509,60 @@ def sweep_jax(
 
 
 def sweep_jax_batched(
-    graphs: Sequence[Union[TaskGraph, GraphArrays]],
+    graphs: Sequence[AnyExport],
     cost: CostModel,
     q_values: Sequence[Optional[float]],
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
 ) -> List[JaxSweep]:
-    """Solve many applications × many Q_max values in one vmapped kernel.
+    """Solve many applications × many Q_max values with one compiled kernel.
 
-    Graphs are padded to a common (N, R, W) via :func:`stack_graph_arrays`;
-    the compiled engine is shared across every graph in the batch (and across
-    future batches of the same padded shape).
+    Scan backend: graphs pad to a common (N, R, W) via
+    :func:`stack_graph_arrays` and solve in one ``vmap``. Pallas backend:
+    graphs pad to a common (N, nnz_r, nnz_w) — the padded rows are cached
+    per export, and :func:`stack_csr_arrays` builds the same layout with a
+    leading batch axis for vmap consumers — and the sweep kernel runs per
+    graph: one compiled kernel (the padded shape is shared) applied
+    sequentially, since the DP grid is already sequential per graph.
+    ``backend="auto"`` resolves per member and solves each group with its
+    own backend (a mixed batch of dense and CSR exports is legal), keeping
+    one compilation per group.
     """
+    if backend == "auto":
+        resolved = [_select_backend(g, "auto") for g in graphs]
+        if "scan" in resolved and "pallas" in resolved:
+            out: List[Optional[JaxSweep]] = [None] * len(graphs)
+            for be in ("scan", "pallas"):
+                idx = [k for k, r in enumerate(resolved) if r == be]
+                group = sweep_jax_batched(
+                    [graphs[k] for k in idx], cost, q_values,
+                    backend=be, interpret=interpret,
+                )
+                for k, res in zip(idx, group):
+                    out[k] = res
+            return out  # type: ignore[return-value]
+        backend = resolved[0] if resolved else "scan"
+    if backend == "pallas":
+        csrs = [_as_csr(g) for g in graphs]
+        out = [None] * len(csrs)
+        nonempty = [(k, a) for k, a in enumerate(csrs) if a.n_tasks > 0]
+        for k, a in enumerate(csrs):
+            if a.n_tasks == 0:
+                out[k] = _empty_sweep(q_values)
+        if nonempty:
+            n = max(a.n_pad for _, a in nonempty)
+            r = max(max(a.nnz_reads for _, a in nonempty), 1)
+            w = max(max(a.nnz_writes for _, a in nonempty), 1)
+            for k, a in nonempty:
+                out[k] = _sweep_pallas(
+                    _padded_csr(a, n, r, w), cost, q_values, interpret
+                )
+        return out  # type: ignore[return-value]
+
     arrays = [_as_arrays(g) for g in graphs]
     nonempty = [(k, a) for k, a in enumerate(arrays) if a.n_tasks > 0]
-    out: List[Optional[JaxSweep]] = [None] * len(arrays)
+    out = [None] * len(arrays)
     for k, a in enumerate(arrays):
         if a.n_tasks == 0:
             out[k] = _empty_sweep(q_values)
@@ -365,7 +572,7 @@ def sweep_jax_batched(
             dp, parent, e_total, feasible, starts = _dp_sweep_vmap(
                 _ga_dict(stacked),
                 jnp.asarray(stacked.n_tasks, dtype=jnp.int32),
-                jnp.asarray(cost_scalars(cost)),
+                _cost_vec(cost),
                 jnp.asarray(_qs_array(q_values)),
             )
         for b, (k, a) in enumerate(nonempty):
@@ -382,11 +589,15 @@ def sweep_jax_batched(
 
 
 def optimal_partition_jax(
-    graph: TaskGraph, cost: CostModel, q_max: Optional[float] = None
+    graph: TaskGraph,
+    cost: CostModel,
+    q_max: Optional[float] = None,
+    *,
+    backend: str = "auto",
 ) -> Partition:
     """Single-Q convenience mirroring :func:`optimal_partition` (raises
     :class:`Infeasible` when Q_max < Q_min)."""
-    res = sweep_jax(graph, cost, [q_max])
+    res = sweep_jax(graph, cost, [q_max], backend=backend)
     parts = res.to_partitions(graph, cost)
     if parts[0] is None:
         raise Infeasible(f"Q_max={q_max} admits no partition")

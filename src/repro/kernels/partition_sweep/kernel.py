@@ -1,0 +1,260 @@
+"""Fused CSR column-sweep + multi-Q DP — Pallas TPU kernel (paper §4.2–§4.3).
+
+One kernel juliennes a whole application: it walks tasks j = 1..N carrying
+the live burst column E⟨·,j⟩ and the DP table, with a grid of
+``(N, n_tiles)`` — the minor grid axis is **one program per column tile of
+i-indices**, so each program owns a ``(tile, 1)`` slice of the column and a
+``(tile, nq)`` slice of the DP candidates, all resident in VMEM scratch
+across the sequential grid.
+
+Read-slot contributions come from the CSR-style compressed slot layout of
+:class:`repro.core.graph.GraphCSRArrays` (flat ``slot_task_ptr`` /
+``slot_cost`` / ``slot_lt`` / ``slot_writer`` / ``slot_linf`` arrays instead
+of the dense ``(N, R)`` rectangle): each program loops over task j's slot
+range and applies the three piecewise-constant updates in-register:
+
+    E⟨i,j⟩ = E⟨i,j-1⟩ + E_task(j) + S(j)
+           + Σ_{p ∈ reads(j)}  E_r(p) · [i > l_j(p)]             (new loads)
+           - Σ_{p ∈ reads(j)}  E_w(p) · [l_∞(p) = j] · [1 ≤ writer(p)]
+                                       · [i ≤ writer(p)]          (store freed)
+    E⟨j,j⟩ = E_s + Σ E_r(p) + E_task(j) + S(j)
+
+then relaxes ``dp[q, j] = min_{i ≤ j, E⟨i,j⟩ ≤ Q[q]} dp[q, i-1] + E⟨i,j⟩``
+for every Q at once, tie-breaking the argmin to the smallest burst start.
+With ``slot_chunk=1`` (default) the slot loop replays numpy's exact
+accumulation order, so the emitted column tables are bit-identical to
+:mod:`.ref` — and hence to the numpy DP oracle — including argmin
+tie-breaks; ``slot_chunk>1`` processes slots in vectorized chunks (one
+masked 2-D reduction per chunk, ~ulp drift, for TPU throughput).
+
+Compiled-mode TPU use is float32 (f64 is interpret-only); the engine's
+differential guarantees are stated for the f64 interpret path, which is
+also the CPU production path (the whole grid lowers to one XLA while-loop).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+# Trace-count regression hook: incremented at trace time only, so tests can
+# assert that serving-style loops re-dispatch the cached kernel instead of
+# re-tracing (see the enable_x64-hoist note in repro/core/partition_jax.py).
+TRACE_COUNT = {"sweep_columns": 0}
+
+
+def _sweep_kernel(
+    ptr_ref,          # (N+1,)       i32  SMEM  read-slot row pointers
+    etask_ref,        # (N,)         f    SMEM  E_task(j)
+    store_ref,        # (N,)         f    SMEM  S(j)
+    es_ref,           # (1,)         f    SMEM  E_s
+    cost_ref,         # (1, nnz_pad) f    VMEM  E_r per read slot
+    free_ref,         # (1, nnz_pad) f    VMEM  E_w of the read packet
+    lt_ref,           # (1, nnz_pad) i32  VMEM  l_j(p)
+    writer_ref,       # (1, nnz_pad) i32  VMEM  writer(p)
+    linf_ref,         # (1, nnz_pad) i32  VMEM  l_∞(p)
+    budget_ref,       # (1, nq_pad)  f    VMEM  Q·(1+rel)+abs, -inf padding
+    mns_ref,          # (N, nq_pad)  f    out   dp[q, j] per column
+    best_ref,         # (N, nq_pad)  i32  out   argmin burst start per column
+    colbuf,           # (Npad, 1)    f    VMEM scratch: live column E⟨·,j⟩
+    dpbuf,            # (Npad, nq)   f    VMEM scratch: dp[q, i-1] table
+    accmin,           # (1, nq_pad)  f    VMEM scratch: cross-tile running min
+    accarg,           # (1, nq_pad)  i32  VMEM scratch: cross-tile argmin
+    *,
+    n_tiles: int,
+    tile: int,
+    slot_chunk: int,
+    dtype,
+):
+    B, C = tile, slot_chunk
+    j = pl.program_id(0) + np.int32(1)   # task / column index, 1..N
+    t = pl.program_id(1)                 # i-tile index, 0..n_tiles-1
+    base = t * np.int32(B)
+
+    # Shared scratch is initialized by the very first program in the grid.
+    @pl.when((j == 1) & (t == 0))
+    def _():
+        dpbuf[...] = jnp.full(dpbuf.shape, jnp.inf, dtype)
+        dpbuf[0, :] = jnp.zeros((dpbuf.shape[1],), dtype)  # dp[q, 0] = 0
+        colbuf[...] = jnp.zeros(colbuf.shape, dtype)
+
+    i_vec = base + np.int32(1) + lax.broadcasted_iota(jnp.int32, (B, 1), 0)
+    prev = i_vec < j                      # bursts ⟨i, j-1⟩ being extended
+    e_j = etask_ref[j - 1]
+    s_j = store_ref[j - 1]
+    colt = colbuf[pl.ds(base, B), :]
+    colt = jnp.where(prev, colt + (e_j + s_j), colt)
+
+    p0 = ptr_ref[j - 1]
+    p1 = ptr_ref[j]
+
+    if C == 1:
+        # Slot-at-a-time: numpy's exact accumulation order (bit parity).
+        def slot(s, carry):
+            colt, sum_er = carry
+            idx = p0 + s
+            sc = cost_ref[0, idx]
+            colt = jnp.where(prev & (i_vec > lt_ref[0, idx]), colt + sc, colt)
+            w = writer_ref[0, idx]
+            freed = (linf_ref[0, idx] == j) & (w >= np.int32(1))
+            colt = jnp.where(
+                prev & freed & (i_vec <= w), colt - free_ref[0, idx], colt
+            )
+            return colt, sum_er + sc
+
+        colt, sum_er = lax.fori_loop(
+            0, p1 - p0, slot, (colt, jnp.asarray(0.0, dtype))
+        )
+    else:
+        # Chunked: one masked 2-D reduction per C slots (~ulp drift).
+        def chunk(s, carry):
+            colt, sum_er = carry
+            idx0 = p0 + s * np.int32(C)
+            lanes = idx0 + lax.broadcasted_iota(jnp.int32, (1, C), 1)
+            valid = lanes < p1
+            sc = jnp.where(valid, cost_ref[0, pl.ds(idx0, C)], 0.0)
+            sf = jnp.where(valid, free_ref[0, pl.ds(idx0, C)], 0.0)
+            slt = lt_ref[0, pl.ds(idx0, C)]
+            swr = writer_ref[0, pl.ds(idx0, C)]
+            sli = linf_ref[0, pl.ds(idx0, C)]
+            loads = jnp.sum(
+                jnp.where(i_vec > slt, sc, 0.0), axis=1, keepdims=True
+            )
+            freed = jnp.sum(
+                jnp.where(
+                    ((sli == j) & (swr >= np.int32(1))) & (i_vec <= swr),
+                    sf,
+                    0.0,
+                ),
+                axis=1,
+                keepdims=True,
+            )
+            colt = jnp.where(prev, colt + loads - freed, colt)
+            return colt, sum_er + jnp.sum(sc)
+
+        nchunks = lax.div(p1 - p0 + np.int32(C - 1), np.int32(C))
+        colt, sum_er = lax.fori_loop(
+            0, nchunks, chunk, (colt, jnp.asarray(0.0, dtype))
+        )
+
+    # The new single-task burst ⟨j,j⟩ (left-to-right, ColumnSweep's order).
+    diag = es_ref[0] + sum_er + e_j + s_j
+    colt = jnp.where(i_vec == j, diag, colt)
+    colbuf[pl.ds(base, B), :] = colt
+
+    # DP relaxation over this tile. dpbuf rows [base, base+B) hold
+    # dp[q, i-1] for the tile's i values; rows ≥ j are still inf, so
+    # beyond-diagonal candidates drop out automatically.
+    dpt = dpbuf[pl.ds(base, B), :]
+    cand = dpt + jnp.where(colt <= budget_ref[...], colt, jnp.inf)
+    tmin = jnp.min(cand, axis=0)                                  # (nq_pad,)
+    # First i achieving the min (the sentinel never survives: inf == inf on
+    # an all-infeasible column still selects i = 1, like numpy's argmin —
+    # infeasibility is carried by mns, bests are only walked where finite).
+    targ = jnp.min(
+        jnp.where(cand == tmin[None, :], i_vec, np.int32(n_tiles * B + 1)),
+        axis=0,
+    )
+
+    # Cross-tile combine: strict < keeps the earliest tile on exact ties,
+    # matching numpy's first-minimum argmin.
+    @pl.when(t == 0)
+    def _():
+        accmin[0, :] = tmin
+        accarg[0, :] = targ
+
+    @pl.when(t > 0)
+    def _():
+        better = tmin < accmin[0, :]
+        accarg[0, :] = jnp.where(better, targ, accarg[0, :])
+        accmin[0, :] = jnp.minimum(accmin[0, :], tmin)
+
+    @pl.when(t == n_tiles - 1)
+    def _():
+        mns_ref[pl.ds(j - 1, 1), :] = accmin[0, :][None, :]
+        best_ref[pl.ds(j - 1, 1), :] = accarg[0, :][None, :]
+
+        @pl.when(j < dpbuf.shape[0])
+        def _():
+            dpbuf[pl.ds(j, 1), :] = accmin[0, :][None, :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("tile", "slot_chunk", "interpret")
+)
+def sweep_columns_call(
+    read_ptr,      # (N+1,)  i32
+    e_task,        # (N,)    f
+    store_add,     # (N,)    f
+    e_startup,     # (1,)    f
+    slot_cost,     # (nnz,)  f
+    slot_free,     # (nnz,)  f
+    slot_lt,       # (nnz,)  i32
+    slot_writer,   # (nnz,)  i32
+    slot_linf,     # (nnz,)  i32
+    budget,        # (nq_pad,) f   already tolerance-scaled; -inf padding
+    *,
+    tile: int = 512,
+    slot_chunk: int = 1,
+    interpret: bool = True,
+):
+    """Launch the sweep kernel: → (mns, bests), each ``(N, nq_pad)``.
+
+    Shapes are static per (N, nnz, nq_pad, tile, slot_chunk); jit caches the
+    lowered kernel so serving loops re-dispatch without re-tracing. Inputs
+    are taken in whatever float dtype ``e_task`` carries (float64 under
+    interpret mode — the differential-exact path — float32 for compiled
+    TPU).
+    """
+    TRACE_COUNT["sweep_columns"] += 1
+    N = e_task.shape[0]
+    nq_pad = budget.shape[0]
+    dtype = e_task.dtype
+    B = min(tile, max(8, N))
+    T = -(-N // B)
+    C = slot_chunk
+    nnz = slot_cost.shape[0]
+    # Slot pool padded so every C-wide dynamic load stays in bounds without
+    # clamping (clamped loads would misalign the validity mask).
+    nnz_pad = (-(-max(nnz, 1) // C) + 1) * C
+
+    def pad1(a):
+        return jnp.pad(a, (0, nnz_pad - nnz))[None, :]
+
+    vspec = lambda shape: pl.BlockSpec(shape, lambda j, t: (0,) * len(shape))
+    sspec = pl.BlockSpec(memory_space=pltpu.SMEM)
+    kern = functools.partial(
+        _sweep_kernel, n_tiles=T, tile=B, slot_chunk=C, dtype=dtype
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(N, T),
+        in_specs=[
+            sspec, sspec, sspec, sspec,
+            vspec((1, nnz_pad)), vspec((1, nnz_pad)), vspec((1, nnz_pad)),
+            vspec((1, nnz_pad)), vspec((1, nnz_pad)), vspec((1, nq_pad)),
+        ],
+        out_specs=[vspec((N, nq_pad)), vspec((N, nq_pad))],
+        out_shape=[
+            jax.ShapeDtypeStruct((N, nq_pad), dtype),
+            jax.ShapeDtypeStruct((N, nq_pad), jnp.int32),
+        ],
+        scratch_shapes=[
+            pltpu.VMEM((T * B, 1), dtype),
+            pltpu.VMEM((T * B, nq_pad), dtype),
+            pltpu.VMEM((1, nq_pad), dtype),
+            pltpu.VMEM((1, nq_pad), jnp.int32),
+        ],
+        interpret=interpret,
+    )(
+        read_ptr, e_task, store_add, e_startup,
+        pad1(slot_cost), pad1(slot_free), pad1(slot_lt),
+        pad1(slot_writer), pad1(slot_linf), budget[None, :],
+    )

@@ -1,0 +1,117 @@
+"""Host wrapper for the CSR sweep kernel: numpy in, numpy column tables out.
+
+``sweep_columns`` is the kernel package's public entry point: it takes a
+:class:`repro.core.graph.GraphCSRArrays` export plus a cost model and a
+Q_max grid, prices the slots (the export itself is cost-model-independent),
+and launches :func:`.kernel.sweep_columns_call`. The engine
+(:mod:`repro.core.partition_jax`, ``backend="pallas"``) assembles the
+returned (mns, bests) into a :class:`~repro.core.partition_jax.JaxSweep`;
+tests compare them bit-for-bit against :func:`.ref.sweep_columns_ref`.
+
+Serving-path notes (ROADMAP "hoist dtype handling"):
+
+* float64 numerics need ``jax.experimental.enable_x64``; the scope is
+  entered here, around conversion + dispatch only, and it is a cheap
+  thread-local flag — the jit cache is keyed per config state, so repeated
+  calls reuse one trace (asserted by tests/test_partition_sweep.py).
+* the priced slot arrays are device-cached per ``(export, cost model,
+  dtype)``, so a serving loop re-solving one application across request
+  shapes uploads the graph once, not per request.
+"""
+
+from __future__ import annotations
+
+from typing import Optional, Sequence, Tuple
+
+import numpy as np
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import enable_x64
+
+from ...core._cache import weak_id_cache
+from ...core.cost import CostModel
+from ...core.graph import GraphCSRArrays
+from .kernel import sweep_columns_call
+from .ref import (  # noqa: F401  (re-exported oracle)
+    _ABS,
+    _REL,
+    slot_costs,
+    store_add_ref,
+    sweep_columns_ref,
+)
+
+__all__ = ["sweep_columns", "sweep_columns_ref", "slot_costs", "store_add_ref"]
+
+
+def _needs_interpret() -> bool:
+    # Compiled mode is TPU-only (pltpu memory spaces); everything else —
+    # CPU and GPU backends alike — takes the interpret path.
+    return jax.default_backend() != "tpu"
+
+
+# (id(csr), cost, dtype name) -> priced + uploaded slot arrays (see
+# core/_cache.py for the id+weakref idiom).
+_DEVICE_CACHE: dict = {}
+
+
+def _device_slots(csr: GraphCSRArrays, cost: CostModel, dtype) -> tuple:
+    def upload():
+        slot_cost, slot_free = slot_costs(csr, cost)
+        store_add = store_add_ref(csr, cost)
+        return (
+            jnp.asarray(csr.read_ptr),
+            jnp.asarray(csr.e_task, dtype=dtype),
+            jnp.asarray(store_add, dtype=dtype),
+            jnp.asarray(np.array([cost.e_startup]), dtype=dtype),
+            jnp.asarray(slot_cost, dtype=dtype),
+            jnp.asarray(slot_free, dtype=dtype),
+            jnp.asarray(csr.read_lt),
+            jnp.asarray(csr.read_writer),
+            jnp.asarray(csr.read_linf),
+        )
+
+    return weak_id_cache(
+        _DEVICE_CACHE, csr, (cost, np.dtype(dtype).name), upload
+    )
+
+
+def sweep_columns(
+    csr: GraphCSRArrays,
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    tile: int = 512,
+    slot_chunk: int = 1,
+    interpret: Optional[bool] = None,
+) -> Tuple[np.ndarray, np.ndarray]:
+    """Solve one CSR export over a Q grid: → (mns, bests), each ``(N, nq)``.
+
+    ``mns[j-1, q]`` is dp[q, j] (optimal cost of tasks 1..j under Q[q]),
+    ``bests[j-1, q]`` the start of the last burst achieving it (infeasible
+    columns carry ``inf`` in mns; bests are only meaningful where finite).
+    ``None`` Q values mean unbounded. ``interpret=None`` auto-selects
+    interpret mode on every non-TPU backend (float64,
+    differential-exact); compiled TPU mode runs float32.
+    """
+    if interpret is None:
+        interpret = _needs_interpret()
+    dtype = np.float64 if interpret else np.float32
+    qs = np.array(
+        [np.inf if q is None else float(q) for q in q_values], dtype=np.float64
+    )
+    nq = qs.shape[0]
+    nq_pad = max(8, -(-nq // 8) * 8)
+    budget = np.full(nq_pad, -np.inf, dtype=np.float64)
+    budget[:nq] = qs * (1.0 + _REL) + _ABS
+
+    with enable_x64(bool(interpret)):
+        args = _device_slots(csr, cost, dtype)
+        mns, bests = sweep_columns_call(
+            *args,
+            jnp.asarray(budget, dtype=dtype),
+            tile=tile,
+            slot_chunk=slot_chunk,
+            interpret=bool(interpret),
+        )
+        return np.asarray(mns)[:, :nq], np.asarray(bests)[:, :nq]

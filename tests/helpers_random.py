@@ -47,6 +47,66 @@ def random_cost_model(rng: random.Random) -> CostModel:
     )
 
 
+def adversarial_tie_graph(
+    rng: random.Random, max_tasks: int = 18, min_tasks: int = 4
+) -> TaskGraph:
+    """Equal-cost graph family for the exact-tie audit (ROADMAP).
+
+    Every energy quantity is a small dyadic rational (task costs from
+    {0.25, 0.5, 1.0}, packet sizes powers of two, dyadic c0/c1 — see
+    :func:`tie_cost_model`), so every burst cost and DP candidate is exactly
+    representable in float64 *regardless of summation order*. Many tasks
+    share identical costs, which makes DP argmin ties the common case
+    instead of a measure-zero event — locking in the "smallest burst start
+    wins" tie-break across the numpy DP, the scan backend, and the
+    CSR/Pallas backend (they must all reconstruct identical bounds, not just
+    identical totals). Shapes stay within the differential suite's padding
+    (≤ 20 tasks, ≤ 3 reads, ≤ 2 writes per task).
+    """
+    n = rng.randint(min_tasks, max_tasks)
+    b = GraphBuilder()
+    avail: List[str] = []
+    for i in range(rng.randint(0, 2)):
+        b.packet(f"e{i}", 2 ** rng.randint(3, 10), external=True)
+        avail.append(f"e{i}")
+    costs = [0.25, 0.5, 0.5, 1.0]  # repeats on purpose: identical tasks tie
+    for t in range(n):
+        n_reads = rng.randint(0, min(3, len(avail)))
+        reads = rng.sample(avail, n_reads)
+        writes = []
+        for w in range(rng.randint(0, 2)):
+            name = f"p{t}_{w}"
+            b.packet(name, 2 ** rng.randint(3, 10), keep=rng.random() < 0.25)
+            writes.append(name)
+        b.task(f"t{t}", reads=tuple(reads), writes=tuple(writes),
+               cost=rng.choice(costs))
+        avail.extend(writes)
+    return b.build()
+
+
+def tie_cost_model(rng: random.Random) -> CostModel:
+    """Dyadic cost model companion to :func:`adversarial_tie_graph`."""
+    return CostModel(
+        e_startup=rng.choice([0.0, 0.25, 0.5]),
+        read=LinearTransfer(rng.choice([0.0, 0.25]), rng.choice([0.0, 2.0 ** -10])),
+        write=LinearTransfer(rng.choice([0.0, 0.25]), rng.choice([0.0, 2.0 ** -12])),
+    )
+
+
+def tie_q_grid(
+    rng: random.Random, q_min_val: float, q_whole: float
+) -> List[Optional[float]]:
+    """Q grid for the tie audit: exact burst-cost lattice points (so the
+    ≤-budget mask itself ties) plus the usual feasibility straddle."""
+    qs: List[Optional[float]] = [None, 0.0, q_min_val, q_whole]
+    lo, hi = min(q_min_val, q_whole), max(q_min_val, q_whole)
+    for _ in range(4):
+        # dyadic interpolation keeps the grid on the exact lattice
+        frac = rng.randint(0, 8) / 8.0
+        qs.append(lo + (hi - lo) * frac)
+    return qs
+
+
 def random_q_grid(
     rng: random.Random, q_min_val: float, q_whole: float
 ) -> List[Optional[float]]:

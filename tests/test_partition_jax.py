@@ -22,7 +22,14 @@ import random
 import numpy as np
 import pytest
 
-from helpers_random import random_cost_model, random_q_grid, random_task_graph
+from helpers_random import (
+    adversarial_tie_graph,
+    random_cost_model,
+    random_q_grid,
+    random_task_graph,
+    tie_cost_model,
+    tie_q_grid,
+)
 
 from repro.configs import REGISTRY
 from repro.core import (
@@ -84,6 +91,21 @@ def test_differential_random_graphs(seed):
     g = random_task_graph(rng, max_tasks=20)
     cm = random_cost_model(rng)
     qs = random_q_grid(rng, q_min(g, cm), whole_app_partition(g, cm).e_total)
+    _assert_matches_oracles(g, cm, qs)
+
+
+@pytest.mark.parametrize("seed", range(25))
+def test_differential_tie_graphs(seed):
+    """Exact-tie audit (ROADMAP): on the adversarial equal-cost family every
+    burst cost is a dyadic rational, so DP argmin ties are exact everywhere —
+    the engine must reconstruct the *same bounds* as the numpy DP (smallest
+    burst start wins), not merely the same totals. The three-way check
+    including the CSR/Pallas backend lives in tests/test_partition_sweep.py.
+    """
+    rng = random.Random(7000 + seed)
+    g = adversarial_tie_graph(rng)
+    cm = tie_cost_model(rng)
+    qs = tie_q_grid(rng, q_min(g, cm), whole_app_partition(g, cm).e_total)
     _assert_matches_oracles(g, cm, qs)
 
 
