@@ -16,11 +16,13 @@ Framework tables (beyond paper):
 * Pallas kernel microbenches (CPU interpret mode — correctness-path timing)
 * partition_sweep: scan vs CSR/Pallas sweep backends + export footprints
   (also written to BENCH_partition_sweep.json)
+* plan_table: offline table build vs O(1) request-path lookup vs the
+  per-request re-plan it replaces (also written to BENCH_plan_table.json)
 
 CLI: ``--section NAME`` runs one section (default: all);
 ``--backend {scan,pallas,auto}`` and ``--smoke`` scope the partition_sweep
-section so CI can smoke-run a single CSR row; ``--json-out`` overrides the
-JSON path.
+and plan_table sections so CI can smoke-run them; ``--json-out`` overrides
+the JSON path.
 """
 
 import argparse
@@ -263,6 +265,70 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
         f.write("\n")
 
 
+def plan_table_bench(smoke=False, json_out=None):
+    """Plan-table serving subsystem: offline build cost vs online lookup.
+
+    Rows: one-shot table build (the whole bucket × Q grid in one batched
+    engine call), table footprint, O(1) lookup latency, and the per-request
+    re-plan it replaces (lower the request's graph + solve one Q — what
+    serve.py would otherwise do per request). Results also land in
+    BENCH_plan_table.json for trend tracking.
+    """
+    from repro.core import optimal_partition_jax
+    from repro.core.layer_profile import lower_config
+    from repro.core.plan_table import _default_cost
+    from repro.launch.planner import build_table_for_arch, resolve_config
+
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    arch = "qwen3-4b"
+    buckets = [(2, 24), (2, 48)] if smoke else [(2, 24), (2, 48), (4, 48), (4, 96)]
+    n_q = 8 if smoke else 32
+    t0 = time.time()
+    table = build_table_for_arch(arch, buckets, n_q)
+    build_s = time.time() - t0
+    row("plan_table.build_ms", f"{build_s * 1e3:.1f}",
+        f"{len(buckets)} buckets x {table.n_q} Q, one batched solve")
+    row("plan_table.size_kB", f"{table.nbytes() / 1e3:.1f}",
+        f"{int(table.feasible.sum())} feasible plans")
+
+    cfg = resolve_config(arch, smoke=True)
+    cm = _default_cost("time")
+    mid_q = float(np.median(table.q_grid[np.isfinite(table.q_grid)]))
+
+    n_lookups = 2000
+    t0 = time.time()
+    for _ in range(n_lookups):
+        table.lookup(2, 20, mid_q)
+    lookup_us = (time.time() - t0) / n_lookups * 1e6
+    row("plan_table.lookup_us", f"{lookup_us:.1f}",
+        "bucketize + Q select + plan slice (request path)")
+
+    # the per-request alternative: lower the shape and solve one Q
+    optimal_partition_jax(lower_config(cfg, 2, 24, kind="time"), cm, mid_q)
+    n_replans = 5
+    t0 = time.time()
+    for _ in range(n_replans):
+        g = lower_config(cfg, 2, 24, kind="time")  # per-request lowering
+        optimal_partition_jax(g, cm, mid_q)
+    replan_us = (time.time() - t0) / n_replans * 1e6
+    row("plan_table.replan_us", f"{replan_us:.0f}",
+        "lower_config + one-Q solve per request (the path lookups replace)")
+    row("plan_table.lookup_speedup", f"{replan_us / max(lookup_us, 1e-9):.0f}",
+        "re-plan / lookup")
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_plan_table.json"
+    )
+    with open(path, "w") as f:
+        json.dump({"smoke": bool(smoke), "rows": records}, f, indent=2)
+        f.write("\n")
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -337,6 +403,7 @@ SECTIONS = {
     "scaling": optimizer_scaling,
     "partition_jax": partition_jax_engine,
     "partition_sweep": partition_sweep,
+    "plan_table": plan_table_bench,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -362,6 +429,8 @@ def main(argv=None) -> None:
         fn = SECTIONS[name]
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
+        elif name == "plan_table":
+            fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()
 

@@ -39,6 +39,8 @@ from .layer_profile import (
     profile_model,
 )
 from .partition import (
+    BUDGET_ABS,
+    BUDGET_REL,
     Infeasible,
     Partition,
     brute_force_partition,
@@ -51,6 +53,17 @@ from .partition import (
     single_task_partition,
     sweep,
     whole_app_partition,
+    within_budget,
+)
+from .plan_table import (
+    PLAN_TABLE_VERSION,
+    PlanTable,
+    PlanTableError,
+    SegmentPlan,
+    StaleTableError,
+    UnknownBucketError,
+    build_plan_table,
+    config_fingerprint,
 )
 from .runtime import (
     BurstRuntime,

@@ -161,11 +161,16 @@ def _jax_kernels():
         n = (f - lo) / jnp.maximum(hi - lo, 1.0)
         return jnp.round(n * 65535.0).astype(jnp.uint16)
 
-    @functools.partial(jax.jit, static_argnums=(2, 3, 4))
+    @functools.partial(jax.jit, static_argnums=(2,))
     def score_window(norm_u16, weights, scale, y, x):
+        # scale stays static (it shapes the decimated image); y/x are traced
+        # so all windows of one pyramid level share a single compilation —
+        # 3 compiles total instead of one per window, which is what makes
+        # the 500+-task reduced graphs executable in the soak tests.
         f = norm_u16.astype(jnp.float32) / 65535.0
         dec = f[::scale, ::scale]
-        win = jax.lax.dynamic_slice(dec, (y, x), (_WIN, _WIN))
+        win = jax.lax.dynamic_slice(dec, (jnp.int32(y), jnp.int32(x)),
+                                    (_WIN, _WIN))
         return window_score(win, weights)
 
     return normalize, score_window

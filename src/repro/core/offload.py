@@ -8,19 +8,34 @@ bytes, Q_max = the HBM activation budget), then the resulting partition is
 shape of the paper's FRAM model). Sweeping Q_max reproduces the paper's
 design-space exploration for HBM: the Pareto front of activation budget vs
 offload overhead, with Q_min (§4.4) the smallest feasible budget.
+
+Solve and pricing are split so the serving path can reuse the pricing:
+:func:`plan_offload` solves then prices; :func:`price_offload_bounds`
+prices *given* segment bounds (e.g. the cut points stored in a
+:class:`repro.core.plan_table.PlanTable`) without any DP solve. Budget
+feasibility uses the global tolerance from :mod:`.partition`
+(``BUDGET_REL``/``BUDGET_ABS``) — the same mask every solver applies.
 """
 
 from __future__ import annotations
 
 import dataclasses
-from typing import List, Optional, Tuple
+from typing import List, Sequence, Tuple
 
 from ..configs.base import ModelConfig
-from .cost import tpu_host_offload_model
-from .layer_profile import build_activation_graph, memory_cost_model, profile_model
-from .partition import Infeasible, Partition, optimal_partition, q_min
+from .burst import burst_detail
+from .cost import PEAK_FLOPS, tpu_host_offload_model
+from .graph import TaskGraph
+from .layer_profile import (
+    LayerProfile,
+    build_activation_graph,
+    memory_cost_model,
+    profile_model,
+)
+from .partition import Infeasible, Partition, optimal_partition, q_min, within_budget
 
-__all__ = ["OffloadPlan", "plan_offload", "min_activation_budget"]
+__all__ = ["OffloadPlan", "plan_offload", "price_offload_bounds",
+           "min_activation_budget"]
 
 
 @dataclasses.dataclass
@@ -58,32 +73,58 @@ def min_activation_budget(cfg: ModelConfig, batch: int, seq: int) -> float:
     return q_min(graph, memory_cost_model())
 
 
+def price_offload_bounds(
+    cfg_name: str,
+    profiles: List[LayerProfile],
+    mem_graph: TaskGraph,
+    bounds: Sequence[Tuple[int, int]],
+    hbm_budget_bytes: float,
+) -> OffloadPlan:
+    """Price a given segmentation under the PCIe time model — no DP solve.
+
+    ``bounds`` may come from :func:`plan_offload`'s own solve or from a
+    precomputed plan table; each segment's memory working set is validated
+    against the budget with the shared solver tolerance, so a plan that a
+    solver would accept prices here without spurious Infeasible flips.
+    """
+    mem = memory_cost_model()
+    bursts = [burst_detail(mem_graph, mem, i, j) for (i, j) in bounds]
+    for b in bursts:
+        if not within_budget(b.total, hbm_budget_bytes):
+            raise Infeasible(
+                f"{cfg_name}: segment ⟨{b.i},{b.j}⟩ working set {b.total:.4g} B "
+                f"exceeds the {hbm_budget_bytes:.4g} B HBM budget"
+            )
+
+    # price the segmentation under the PCIe time model
+    pcie = tpu_host_offload_model()
+    pcie_s = 0.0
+    offload_bytes = []
+    for b in bursts:
+        w = sum(mem_graph.packets[n].nbytes for n in b.stores)
+        r = sum(mem_graph.packets[n].nbytes for n in b.loads)
+        pcie_s += (pcie.write.bytes_cost(w) if w else 0.0)
+        pcie_s += (pcie.read.bytes_cost(r) if r else 0.0)
+        offload_bytes.append(w)
+
+    compute_s = sum(p.flops for p in profiles) / PEAK_FLOPS
+    return OffloadPlan(
+        cfg_name=cfg_name,
+        hbm_budget_bytes=hbm_budget_bytes,
+        bounds=list(bounds),
+        segment_peak_bytes=[b.total for b in bursts],
+        offload_bytes=offload_bytes,
+        pcie_seconds=pcie_s,
+        compute_seconds=compute_s,
+    )
+
+
 def plan_offload(cfg: ModelConfig, batch: int, seq: int,
                  hbm_budget_bytes: float) -> OffloadPlan:
     profiles, long_lived = profile_model(cfg, batch, seq)
     mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
     part: Partition = optimal_partition(mem_graph, memory_cost_model(),
                                         hbm_budget_bytes)
-
-    # price the chosen partition under the PCIe time model
-    pcie = tpu_host_offload_model()
-    pcie_s = 0.0
-    offload_bytes = []
-    for b in part.bursts:
-        w = sum(mem_graph.packets[n].nbytes for n in b.stores)
-        r = sum(mem_graph.packets[n].nbytes for n in b.loads)
-        pcie_s += (pcie.write.bytes_cost(w) if w else 0.0)
-        pcie_s += (pcie.read.bytes_cost(r) if r else 0.0)
-        offload_bytes.append(w)
-    from .cost import PEAK_FLOPS
-
-    compute_s = sum(p.flops for p in profiles) / PEAK_FLOPS
-    return OffloadPlan(
-        cfg_name=cfg.name,
-        hbm_budget_bytes=hbm_budget_bytes,
-        bounds=part.bounds,
-        segment_peak_bytes=[b.total for b in part.bursts],
-        offload_bytes=offload_bytes,
-        pcie_seconds=pcie_s,
-        compute_seconds=compute_s,
+    return price_offload_bounds(
+        cfg.name, profiles, mem_graph, part.bounds, hbm_budget_bytes
     )

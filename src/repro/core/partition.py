@@ -35,6 +35,7 @@ from .graph import TaskGraph
 __all__ = [
     "BUDGET_REL",
     "BUDGET_ABS",
+    "within_budget",
     "Partition",
     "Infeasible",
     "optimal_partition",
@@ -64,7 +65,11 @@ BUDGET_REL = 1e-9
 BUDGET_ABS = 1e-12
 
 
-def _within_budget(value, q) -> bool:
+def within_budget(value, q) -> bool:
+    """Shared budget predicate: ``value`` fits under ``q`` up to the global
+    tolerance. Every consumer comparing a cost against a capacity — solvers,
+    planners (offload/remat), the plan-table lookup — must go through this
+    (or the constants above) so feasibility masks agree across paths."""
     return value <= q * (1 + BUDGET_REL) + BUDGET_ABS
 
 
@@ -128,7 +133,7 @@ class Partition:
             raise AssertionError("partition does not cover all tasks")
         if self.q_max is not None:
             for b in self.bursts:
-                if not _within_budget(b.total, self.q_max):
+                if not within_budget(b.total, self.q_max):
                     raise AssertionError(
                         f"burst ⟨{b.i},{b.j}⟩ cost {b.total} exceeds Q_max {self.q_max}"
                     )
@@ -287,10 +292,10 @@ def dijkstra_partition(
         lower = cost.e_startup
         for j in range(i, n + 1):
             lower += graph.task(j).cost
-            if prune and not _within_budget(lower, q):
+            if prune and not within_budget(lower, q):
                 break
             e = burst_cost(graph, cost, i, j)
-            if _within_budget(e, q):
+            if within_budget(e, q):
                 edges[i - 1].append((j, e))
     dist = np.full(n + 1, np.inf)
     parent = np.zeros(n + 1, dtype=np.int64)
@@ -334,7 +339,7 @@ def brute_force_partition(
                 start = b + 1
         bounds.append((start, n))
         part = _partition_from_bounds(graph, cost, bounds, q_max)
-        if not _within_budget(part.max_burst, q):
+        if not within_budget(part.max_burst, q):
             continue
         if best is None or part.e_total < best.e_total:
             best = part

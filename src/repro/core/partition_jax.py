@@ -113,6 +113,11 @@ _AUTO_DENSE_BYTES = 32 << 20
 # no-retrace test in tests/test_partition_sweep.py).
 TRACE_COUNT = {"dp_sweep": 0}
 
+# Host-side solve counters (incremented per engine entry, cached or not):
+# the plan-table serving tests pin "zero partitioner solves on the request
+# path" against these.
+SOLVE_COUNT = {"sweep_jax": 0, "sweep_jax_batched": 0}
+
 
 # ---------------------------------------------------------------------------
 # The jitted engine
@@ -481,6 +486,7 @@ def sweep_jax(
     docstring); ``interpret`` is forwarded to the Pallas backend (``None``
     auto-selects interpret mode on CPU).
     """
+    SOLVE_COUNT["sweep_jax"] += 1
     backend = _select_backend(graph, backend)
     if backend == "pallas":
         csr = _as_csr(graph)
@@ -529,6 +535,7 @@ def sweep_jax_batched(
     own backend (a mixed batch of dense and CSR exports is legal), keeping
     one compilation per group.
     """
+    SOLVE_COUNT["sweep_jax_batched"] += 1
     if backend == "auto":
         resolved = [_select_backend(g, "auto") for g in graphs]
         if "scan" in resolved and "pallas" in resolved:

@@ -1,0 +1,496 @@
+"""Precomputed Q-grid segment-plan tables (the serving-path integration).
+
+The paper's core claim is that energy-bounded execution cycles are planned
+*ahead of time* and replayed cheaply at runtime (0.12% measured overhead).
+This module is that split for the TPU serving path: an **offline** builder
+solves the whole (shape-bucket × Q_max) design space in one batched engine
+call (:func:`repro.core.partition_jax.sweep_jax_batched`), and the **online**
+side (:mod:`repro.launch.planner` / :mod:`repro.launch.serve`) answers every
+request with an O(1) table lookup — no DP solve, no retrace, no re-upload on
+the request path.
+
+Table contents, per (bucket b, Q index k):
+
+* the reconstructed segment bounds (the julienne cut points — these double as
+  offload boundaries, remat boundaries, and pipeline cuts for the planners in
+  :mod:`repro.launch.planner`),
+* the per-cycle energy of every segment (what one system activation must
+  deliver), and
+* ``e_total`` / ``feasible`` for the whole request shape.
+
+Serialization is a single ``.npz`` whose ``header`` entry is a JSON document
+carrying the format version, the architecture, the cost-model scalars, and a
+config fingerprint; :func:`PlanTable.load` refuses stale versions
+(:class:`StaleTableError`) and :func:`build_plan_table` keys its on-disk cache
+by the fingerprint, so a table built for one (config, buckets, Q grid, cost
+model) can never silently serve another.
+
+Bit-exactness contract (tested in tests/test_plan_table.py): a table lookup
+returns bounds bit-identical to a direct :func:`optimal_partition_jax` solve
+of the same (graph, cost, Q) — the batched build pads graphs to a common
+shape, but padded slots contribute exact zeros and the per-Q DP rows are
+independent, so tabulated and direct plans agree bound-for-bound.
+"""
+
+from __future__ import annotations
+
+import dataclasses
+import hashlib
+import json
+import os
+import tempfile
+from typing import Dict, List, Optional, Sequence, Tuple, Union
+
+import numpy as np
+
+from ..configs.base import ModelConfig
+from .burst import burst_cost
+from .cost import CostModel, cost_scalars, tpu_host_offload_model
+from .graph import TaskGraph
+from .layer_profile import lower_config, memory_cost_model
+from .partition import BUDGET_ABS, BUDGET_REL, Infeasible
+
+__all__ = [
+    "PLAN_TABLE_VERSION",
+    "PlanTableError",
+    "StaleTableError",
+    "UnknownBucketError",
+    "SegmentPlan",
+    "PlanTable",
+    "build_plan_table",
+    "config_fingerprint",
+    "BUILD_STATS",
+]
+
+PLAN_TABLE_VERSION = 1
+
+# Offline-build observability (tests assert the fingerprint cache short-
+# circuits the solve): bumped by build_plan_table only.
+BUILD_STATS = {"built": 0, "cache_hits": 0}
+
+
+class PlanTableError(ValueError):
+    """Malformed, mismatched, or misused plan table."""
+
+
+class StaleTableError(PlanTableError):
+    """On-disk table was written by an incompatible format version."""
+
+
+class UnknownBucketError(PlanTableError, KeyError):
+    """Request shape maps to no tabulated (batch, seq) bucket."""
+
+
+@dataclasses.dataclass(frozen=True)
+class SegmentPlan:
+    """One looked-up plan: the energy-bounded cycles for a request shape.
+
+    ``bounds`` are 1-based inclusive task ranges over the lowered activation
+    graph (the julienne cut points); ``cycle_energy[c]`` is the modeled energy
+    of cycle ``c`` (E_s + loads + execution + stores — what one system
+    activation must deliver); ``e_total`` is the whole request.
+    """
+
+    arch: str
+    batch: int
+    seq_bucket: int
+    q_max: Optional[float]
+    n_tasks: int
+    bounds: Tuple[Tuple[int, int], ...]
+    cycle_energy: Tuple[float, ...]
+    e_total: float
+
+    @property
+    def n_cycles(self) -> int:
+        return len(self.bounds)
+
+    @property
+    def max_cycle_energy(self) -> float:
+        return max(self.cycle_energy, default=0.0)
+
+    @property
+    def cut_points(self) -> Tuple[int, ...]:
+        """Interior segment ends — the pipeline/offload/remat cut points."""
+        return tuple(j for (_, j) in self.bounds[:-1])
+
+    def summary(self) -> str:
+        q = "inf" if self.q_max is None else f"{self.q_max:.6g}"
+        return (
+            f"{self.arch} b{self.batch}/s{self.seq_bucket}: "
+            f"{self.n_cycles} cycles @ Q≤{q}, "
+            f"max cycle {self.max_cycle_energy:.6g}, "
+            f"E_total {self.e_total:.6g}"
+        )
+
+
+def _q_list(q_values: Sequence[Optional[float]]) -> List[Optional[float]]:
+    out: List[Optional[float]] = []
+    for q in q_values:
+        if q is None or (isinstance(q, float) and np.isinf(q)):
+            out.append(None)
+        else:
+            out.append(float(q))
+    return out
+
+
+def config_fingerprint(
+    cfg: ModelConfig,
+    shape_buckets: Sequence[Tuple[int, int]],
+    q_values: Sequence[Optional[float]],
+    kind: str,
+    cost: CostModel,
+) -> str:
+    """Content hash keying the build cache and pinning table identity.
+
+    Covers everything the solved plans depend on: the full ModelConfig, the
+    bucket list, the Q grid (exact float reprs), the cost interpretation
+    (``kind``) and the cost-model scalars, plus the table format version.
+    """
+    payload = {
+        "version": PLAN_TABLE_VERSION,
+        "cfg": dataclasses.asdict(cfg),
+        "buckets": [[int(b), int(s)] for (b, s) in shape_buckets],
+        "q_grid": [None if q is None else q.hex() for q in _q_list(q_values)],
+        "kind": kind,
+        "cost": {"name": cost.name, "scalars": [c.hex() for c in cost_scalars(cost)]},
+    }
+    blob = json.dumps(payload, sort_keys=True, separators=(",", ":"))
+    return hashlib.sha256(blob.encode()).hexdigest()
+
+
+class PlanTable:
+    """Immutable (bucket × Q) grid of precomputed segment plans.
+
+    Construct via :func:`build_plan_table` or :meth:`load`; query via
+    :meth:`lookup`. Storage is flat-ragged: entry ``(b, k)`` owns segment rows
+    ``seg_ptr[b*nq+k] : seg_ptr[b*nq+k+1]`` of ``seg_start``/``seg_end``/
+    ``cycle_energy`` (the CSR idiom the engine already uses for graphs).
+    """
+
+    def __init__(
+        self,
+        header: Dict,
+        bucket_batch: np.ndarray,
+        bucket_seq: np.ndarray,
+        n_tasks: np.ndarray,
+        q_grid: np.ndarray,
+        feasible: np.ndarray,
+        e_total: np.ndarray,
+        seg_ptr: np.ndarray,
+        seg_start: np.ndarray,
+        seg_end: np.ndarray,
+        cycle_energy: np.ndarray,
+    ) -> None:
+        self.header = dict(header)
+        self.bucket_batch = np.asarray(bucket_batch, dtype=np.int64)
+        self.bucket_seq = np.asarray(bucket_seq, dtype=np.int64)
+        self.n_tasks = np.asarray(n_tasks, dtype=np.int64)
+        self.q_grid = np.asarray(q_grid, dtype=np.float64)
+        self.feasible = np.asarray(feasible, dtype=bool)
+        self.e_total = np.asarray(e_total, dtype=np.float64)
+        self.seg_ptr = np.asarray(seg_ptr, dtype=np.int64)
+        self.seg_start = np.asarray(seg_start, dtype=np.int32)
+        self.seg_end = np.asarray(seg_end, dtype=np.int32)
+        self.cycle_energy = np.asarray(cycle_energy, dtype=np.float64)
+        nb, nq = self.feasible.shape
+        if self.seg_ptr.shape[0] != nb * nq + 1:
+            raise PlanTableError(
+                f"seg_ptr length {self.seg_ptr.shape[0]} != {nb}*{nq}+1"
+            )
+
+    # -- identity ----------------------------------------------------------
+
+    @property
+    def arch(self) -> str:
+        return self.header["arch"]
+
+    @property
+    def kind(self) -> str:
+        return self.header["kind"]
+
+    @property
+    def fingerprint(self) -> str:
+        return self.header["fingerprint"]
+
+    @property
+    def e_startup(self) -> float:
+        """E_s of the cost model the table was priced under."""
+        return float(self.header["cost_scalars"][0])
+
+    @property
+    def n_buckets(self) -> int:
+        return int(self.bucket_batch.shape[0])
+
+    @property
+    def n_q(self) -> int:
+        return int(self.q_grid.shape[0])
+
+    def buckets(self) -> List[Tuple[int, int]]:
+        return [
+            (int(b), int(s)) for b, s in zip(self.bucket_batch, self.bucket_seq)
+        ]
+
+    def q_values(self) -> List[Optional[float]]:
+        return [None if np.isinf(q) else float(q) for q in self.q_grid]
+
+    # -- lookup ------------------------------------------------------------
+
+    def bucket_index(self, batch: int, seq: int) -> int:
+        """Smallest tabulated seq-bucket covering ``seq`` at exactly ``batch``."""
+        ok = (self.bucket_batch == int(batch)) & (self.bucket_seq >= int(seq))
+        idx = np.flatnonzero(ok)
+        if idx.size == 0:
+            raise UnknownBucketError(
+                f"no bucket covers (batch={batch}, seq={seq}); "
+                f"tabulated: {self.buckets()}"
+            )
+        return int(idx[np.argmin(self.bucket_seq[idx])])
+
+    def q_index(self, energy_budget: Optional[float]) -> int:
+        """Largest tabulated Q_max that fits under ``energy_budget``.
+
+        Any plan solved for Q' ≤ budget is feasible for the budget (every
+        cycle ≤ Q' ≤ budget), and e_total is non-increasing in Q, so the
+        largest fitting grid point is the best tabulated plan. ``None`` means
+        unbounded and selects the largest grid entry.
+        """
+        if energy_budget is None:
+            return int(np.argmax(self.q_grid))
+        # vectorized within_budget(q, budget) over the grid (request path)
+        cap = float(energy_budget) * (1 + BUDGET_REL) + BUDGET_ABS
+        fits = np.flatnonzero(self.q_grid <= cap)
+        if fits.size == 0:
+            raise Infeasible(
+                f"energy budget {energy_budget} is below the smallest "
+                f"tabulated Q_max {self.q_grid.min():.6g}"
+            )
+        return int(fits[np.argmax(self.q_grid[fits])])
+
+    def plan_at(self, b: int, k: int) -> SegmentPlan:
+        """The stored plan for bucket index ``b`` at Q index ``k``."""
+        if not self.feasible[b, k]:
+            q = self.q_grid[k]
+            raise Infeasible(
+                f"bucket {self.buckets()[b]} infeasible at Q_max={q:.6g}"
+            )
+        e = b * self.n_q + k
+        lo, hi = int(self.seg_ptr[e]), int(self.seg_ptr[e + 1])
+        q = self.q_grid[k]
+        return SegmentPlan(
+            arch=self.arch,
+            batch=int(self.bucket_batch[b]),
+            seq_bucket=int(self.bucket_seq[b]),
+            q_max=None if np.isinf(q) else float(q),
+            n_tasks=int(self.n_tasks[b]),
+            bounds=tuple(
+                (int(i), int(j))
+                for i, j in zip(self.seg_start[lo:hi], self.seg_end[lo:hi])
+            ),
+            cycle_energy=tuple(float(c) for c in self.cycle_energy[lo:hi]),
+            e_total=float(self.e_total[b, k]),
+        )
+
+    def lookup(
+        self, batch: int, seq: int, energy_budget: Optional[float] = None
+    ) -> SegmentPlan:
+        """O(1) request-path query: bucket the shape, pick the Q, return the
+        precomputed plan. Raises :class:`UnknownBucketError` for untabulated
+        shapes and :class:`Infeasible` for budgets below the grid."""
+        return self.plan_at(
+            self.bucket_index(batch, seq), self.q_index(energy_budget)
+        )
+
+    # -- serialization -----------------------------------------------------
+
+    def save(self, path: str) -> str:
+        """Write the table as one ``.npz`` with an embedded JSON header
+        (atomic: write-to-temp + rename, same protocol as DirNVM)."""
+        directory = os.path.dirname(os.path.abspath(path)) or "."
+        os.makedirs(directory, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=directory, suffix=".npz")
+        try:
+            with os.fdopen(fd, "wb") as fh:
+                np.savez(
+                    fh,
+                    header=np.array(json.dumps(self.header, sort_keys=True)),
+                    bucket_batch=self.bucket_batch,
+                    bucket_seq=self.bucket_seq,
+                    n_tasks=self.n_tasks,
+                    q_grid=self.q_grid,
+                    feasible=self.feasible,
+                    e_total=self.e_total,
+                    seg_ptr=self.seg_ptr,
+                    seg_start=self.seg_start,
+                    seg_end=self.seg_end,
+                    cycle_energy=self.cycle_energy,
+                )
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "PlanTable":
+        with np.load(path, allow_pickle=False) as z:
+            try:
+                header = json.loads(str(z["header"]))
+            except (KeyError, json.JSONDecodeError) as e:
+                raise PlanTableError(f"{path}: missing/corrupt header") from e
+            version = header.get("version")
+            if version != PLAN_TABLE_VERSION:
+                raise StaleTableError(
+                    f"{path}: table version {version} != supported "
+                    f"{PLAN_TABLE_VERSION}; rebuild with build_plan_table()"
+                )
+            return cls(
+                header=header,
+                bucket_batch=z["bucket_batch"],
+                bucket_seq=z["bucket_seq"],
+                n_tasks=z["n_tasks"],
+                q_grid=z["q_grid"],
+                feasible=z["feasible"],
+                e_total=z["e_total"],
+                seg_ptr=z["seg_ptr"],
+                seg_start=z["seg_start"],
+                seg_end=z["seg_end"],
+                cycle_energy=z["cycle_energy"],
+            )
+
+    def nbytes(self) -> int:
+        return int(
+            sum(
+                a.nbytes
+                for a in (
+                    self.bucket_batch, self.bucket_seq, self.n_tasks,
+                    self.q_grid, self.feasible, self.e_total, self.seg_ptr,
+                    self.seg_start, self.seg_end, self.cycle_energy,
+                )
+            )
+        )
+
+    def summary(self) -> str:
+        feas = int(self.feasible.sum())
+        return (
+            f"PlanTable[{self.arch}/{self.kind}] {self.n_buckets} buckets × "
+            f"{self.n_q} Q points, {feas}/{self.feasible.size} feasible, "
+            f"{self.nbytes() / 1e3:.1f} kB"
+        )
+
+
+def _default_cost(kind: str) -> CostModel:
+    return memory_cost_model() if kind == "memory" else tpu_host_offload_model()
+
+
+def build_plan_table(
+    cfg: Union[ModelConfig, str],
+    shape_buckets: Sequence[Tuple[int, int]],
+    q_values: Sequence[Optional[float]],
+    *,
+    kind: str = "time",
+    cost: Optional[CostModel] = None,
+    backend: str = "auto",
+    cache_dir: Optional[str] = None,
+    graphs: Optional[Sequence[TaskGraph]] = None,
+) -> PlanTable:
+    """Offline build: lower every (batch, seq) bucket via
+    :func:`lower_config` and solve the whole bucket × Q grid in one
+    batched engine call.
+
+    ``kind`` picks the activation-graph cost interpretation ("time" seconds /
+    "memory" working bytes — see :mod:`.layer_profile`); ``cost`` prices
+    transfers and defaults per kind. With ``cache_dir``, the build is keyed by
+    :func:`config_fingerprint` — a prior table for the identical inputs is
+    loaded instead of re-solved, and stale or mismatched files are rebuilt in
+    place. ``graphs``, if given, must be the buckets' own
+    ``lower_config(cfg, b, s, kind=kind)`` results (one per bucket, in
+    order) — callers that already lowered them (e.g. to derive the Q grid)
+    skip the second lowering; identity is still pinned by the fingerprint
+    over (cfg, buckets, kind).
+    """
+    from .partition_jax import sweep_jax_batched  # lazy: jax-heavy
+
+    if isinstance(cfg, str):
+        from ..configs import get_config
+
+        cfg = get_config(cfg)
+    buckets = [(int(b), int(s)) for (b, s) in shape_buckets]
+    if not buckets:
+        raise PlanTableError("shape_buckets is empty")
+    if len(set(buckets)) != len(buckets):
+        raise PlanTableError(f"duplicate shape buckets in {buckets}")
+    qs = _q_list(q_values)
+    if not qs:
+        raise PlanTableError("q_values is empty")
+    cm = cost if cost is not None else _default_cost(kind)
+    fp = config_fingerprint(cfg, buckets, qs, kind, cm)
+
+    cache_path = None
+    if cache_dir is not None:
+        cache_path = os.path.join(cache_dir, f"plan_{fp[:16]}.npz")
+        if os.path.exists(cache_path):
+            try:
+                table = PlanTable.load(cache_path)
+                if table.fingerprint == fp:
+                    BUILD_STATS["cache_hits"] += 1
+                    return table
+            except PlanTableError:
+                pass  # stale/corrupt cache entry: rebuild below
+
+    if graphs is None:
+        graphs = [lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets]
+    elif len(graphs) != len(buckets):
+        raise PlanTableError(
+            f"{len(graphs)} pre-lowered graphs for {len(buckets)} buckets"
+        )
+    sweeps = sweep_jax_batched(graphs, cm, qs, backend=backend)
+
+    nb, nq = len(buckets), len(qs)
+    feasible = np.zeros((nb, nq), dtype=bool)
+    e_total = np.full((nb, nq), np.inf, dtype=np.float64)
+    seg_ptr = np.zeros(nb * nq + 1, dtype=np.int64)
+    starts: List[int] = []
+    ends: List[int] = []
+    energies: List[float] = []
+    for b, (graph, res) in enumerate(zip(graphs, sweeps)):
+        for k in range(nq):
+            e = b * nq + k
+            bounds = res.bounds(k)
+            if bounds is not None:
+                feasible[b, k] = True
+                e_total[b, k] = float(res.e_total[k])
+                for (i, j) in bounds:
+                    starts.append(i)
+                    ends.append(j)
+                    energies.append(burst_cost(graph, cm, i, j))
+            seg_ptr[e + 1] = len(starts)
+
+    header = {
+        "version": PLAN_TABLE_VERSION,
+        "arch": cfg.name,
+        "kind": kind,
+        "cost_name": cm.name,
+        "cost_scalars": cost_scalars(cm).tolist(),
+        "fingerprint": fp,
+        "backend": backend,
+    }
+    table = PlanTable(
+        header=header,
+        bucket_batch=np.array([b for (b, _) in buckets], dtype=np.int64),
+        bucket_seq=np.array([s for (_, s) in buckets], dtype=np.int64),
+        n_tasks=np.array([g.n_tasks for g in graphs], dtype=np.int64),
+        q_grid=np.array(
+            [np.inf if q is None else q for q in qs], dtype=np.float64
+        ),
+        feasible=feasible,
+        e_total=e_total,
+        seg_ptr=seg_ptr,
+        seg_start=np.array(starts, dtype=np.int32),
+        seg_end=np.array(ends, dtype=np.int32),
+        cycle_energy=np.array(energies, dtype=np.float64),
+    )
+    BUILD_STATS["built"] += 1
+    if cache_path is not None:
+        table.save(cache_path)
+    return table

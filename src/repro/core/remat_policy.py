@@ -9,6 +9,12 @@ the √L-style uniform segmentation; for heterogeneous stacks (MoE vs dense,
 Mamba vs shared-attention in zamba2) the boundaries land after *cheap*
 layers — the dependency-aware placement the paper argues for.
 
+Like :mod:`.offload`, solve and pricing are split: :func:`plan_remat`
+sweeps Q and keeps the cheapest feasible segmentation, while
+:func:`remat_from_bounds` prices *given* boundaries (e.g. the cut points
+stored in a plan table) with no DP solve. Budget feasibility uses the
+global solver tolerance from :mod:`.partition` — no local epsilons.
+
 ``segments_for_scan`` converts a plan into the (n_segments, seg_len) shape
 needed for the double-scan lowering of a homogeneous layer stack.
 """
@@ -16,15 +22,20 @@ needed for the double-scan lowering of a homogeneous layer stack.
 from __future__ import annotations
 
 import dataclasses
-import math
-from typing import List, Optional, Tuple
+from typing import List, Optional, Sequence, Tuple
 
 from ..configs.base import ModelConfig
 from .cost import PEAK_FLOPS
-from .layer_profile import build_activation_graph, memory_cost_model, profile_model
-from .partition import Partition, optimal_partition
+from .graph import TaskGraph
+from .layer_profile import (
+    LayerProfile,
+    build_activation_graph,
+    memory_cost_model,
+    profile_model,
+)
+from .partition import Infeasible, Partition, within_budget
 
-__all__ = ["RematPlan", "plan_remat", "segments_for_scan"]
+__all__ = ["RematPlan", "plan_remat", "remat_from_bounds", "segments_for_scan"]
 
 
 @dataclasses.dataclass
@@ -51,6 +62,62 @@ class RematPlan:
                 f"{100 * self.recompute_fraction:.1f}%")
 
 
+def _saved_and_recompute(
+    profiles: List[LayerProfile],
+    mem_graph: TaskGraph,
+    part: Partition,
+) -> Tuple[int, float]:
+    """(boundary bytes kept in HBM, recompute FLOPs) for a segmentation.
+
+    The backward pass recomputes each segment's interior; layers whose
+    outputs are saved boundaries need no recompute — so more (smaller)
+    segments trade HBM for less recompute, the knob the Q_max sweep turns.
+    """
+    saved = sum(
+        mem_graph.packets[n].nbytes for b in part.bursts for n in b.stores
+    )
+    boundary_layers = {j for (_, j) in part.bounds}
+    recompute = sum(
+        p.flops for idx, p in enumerate(profiles, start=1)
+        if idx not in boundary_layers
+    )
+    return int(saved), recompute
+
+
+def remat_from_bounds(
+    cfg_name: str,
+    profiles: List[LayerProfile],
+    mem_graph: TaskGraph,
+    bounds: Sequence[Tuple[int, int]],
+    hbm_budget_bytes: float,
+) -> RematPlan:
+    """Price a given remat segmentation — no DP solve (plan-table path).
+
+    Feasibility (saved boundaries + largest transient working set ≤ budget)
+    uses the shared solver tolerance, matching :func:`plan_remat`'s sweep.
+    """
+    from .partition import _partition_from_bounds
+
+    mem = memory_cost_model()
+    part = _partition_from_bounds(mem_graph, mem, list(bounds), None)
+    saved, rec_flops = _saved_and_recompute(profiles, mem_graph, part)
+    if not within_budget(saved + part.max_burst, hbm_budget_bytes):
+        raise Infeasible(
+            f"{cfg_name}: saved boundaries ({saved / 1e9:.2f} GB) + transient "
+            f"peak ({part.max_burst / 1e9:.2f} GB) exceed the "
+            f"{hbm_budget_bytes / 1e9:.2f} GB budget"
+        )
+    compute = sum(p.flops for p in profiles) / PEAK_FLOPS
+    return RematPlan(
+        cfg_name=cfg_name,
+        hbm_budget_bytes=hbm_budget_bytes,
+        bounds=list(bounds),
+        saved_bytes=saved,
+        recompute_seconds=rec_flops / PEAK_FLOPS,
+        compute_seconds=compute,
+    )
+
+
 def plan_remat(cfg: ModelConfig, batch: int, seq: int,
                hbm_budget_bytes: float) -> RematPlan:
     """Minimize recompute subject to (saved boundaries + transient working
@@ -64,7 +131,7 @@ def plan_remat(cfg: ModelConfig, batch: int, seq: int,
     """
     import numpy as np
 
-    from .partition import Infeasible, q_min as _q_min, sweep as _sweep
+    from .partition import q_min as _q_min, sweep as _sweep
 
     profiles, long_lived = profile_model(cfg, batch, seq)
     mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
@@ -76,35 +143,17 @@ def plan_remat(cfg: ModelConfig, batch: int, seq: int,
     for cand in _sweep(mem_graph, mem, qs):
         if cand is None:
             continue
-        saved_c = sum(mem_graph.packets[n].nbytes
-                      for b in cand.bursts for n in b.stores)
-        if saved_c + cand.max_burst > hbm_budget_bytes:
+        saved_c, rec = _saved_and_recompute(profiles, mem_graph, cand)
+        if not within_budget(saved_c + cand.max_burst, hbm_budget_bytes):
             continue
-        boundary = {j for (_, j) in cand.bounds}
-        rec = sum(p.flops for i, p in enumerate(profiles, 1) if i not in boundary)
         if best_recompute is None or rec < best_recompute:
             best_recompute, part = rec, cand
     if part is None:
         raise Infeasible(
             f"no remat segmentation fits {hbm_budget_bytes / 1e9:.2f} GB "
             f"(transient Q_min alone is {qmn / 1e9:.2f} GB)")
-    saved = sum(
-        mem_graph.packets[n].nbytes for b in part.bursts for n in b.stores)
-    # backward recomputes each segment's interior; the layers whose outputs
-    # are saved boundaries need no recompute — so more (smaller) segments
-    # trade HBM for less recompute, the knob the Q_max sweep turns.
-    boundary_layers = {j for (_, j) in part.bounds}
-    recompute = sum(
-        p.flops for idx, p in enumerate(profiles, start=1)
-        if idx not in boundary_layers) / PEAK_FLOPS
-    compute = sum(p.flops for p in profiles) / PEAK_FLOPS
-    return RematPlan(
-        cfg_name=cfg.name,
-        hbm_budget_bytes=hbm_budget_bytes,
-        bounds=part.bounds,
-        saved_bytes=int(saved),
-        recompute_seconds=recompute,
-        compute_seconds=compute,
+    return remat_from_bounds(
+        cfg.name, profiles, mem_graph, part.bounds, hbm_budget_bytes
     )
 
 

@@ -143,6 +143,7 @@ class BurstRuntime:
         nvm: Optional[Any] = None,
         cost: Optional[CostModel] = None,
         crash_hook: Optional[CrashHook] = None,
+        on_commit: Optional[Callable[[int], None]] = None,
     ) -> None:
         partition.validate(graph)
         self.graph = graph
@@ -150,6 +151,7 @@ class BurstRuntime:
         self.nvm = nvm if nvm is not None else MemoryNVM()
         self.cost = cost
         self.crash_hook = crash_hook
+        self.on_commit = on_commit
         self.stats = ExecutionStats()
 
     # -- one burst = one "energy quantum" --------------------------------------
@@ -194,6 +196,10 @@ class BurstRuntime:
         self.stats.bursts_run += 1
         if self.cost is not None:
             self.stats.energy += detail.total
+        if self.on_commit is not None:
+            # post-commit observer (progress streaming); runs after the
+            # linearization point so a crash inside it cannot lose the burst
+            self.on_commit(b)
         # power off: volatile memory is dropped on return
 
     def _load_set(self, i: int, j: int) -> Tuple[str, ...]:

@@ -1,0 +1,241 @@
+"""Online plan consumption + offline table building (CLI).
+
+:class:`ServePlanner` is the request-path face of a
+:class:`repro.core.plan_table.PlanTable`: every query is an O(1) lookup —
+no DP solve, no graph lowering — and the planner keeps counters the serving
+regression tests pin ("zero partitioner solves on the request path").
+
+Besides the serving plan itself, the stored cut points feed the other three
+julienne consumers *without re-solving*:
+
+* :meth:`ServePlanner.offload_plan` — price the tabulated bounds as an
+  activation-offload schedule (:func:`repro.core.offload.price_offload_bounds`);
+* :meth:`ServePlanner.remat_plan` — price them as remat segment boundaries
+  (:func:`repro.core.remat_policy.remat_from_bounds`);
+* :meth:`ServePlanner.pipeline_cuts` — the interior segment ends as
+  pipeline-stage cuts.
+
+:func:`request_cycles` maps a looked-up plan onto a request's token steps:
+each step (prefill or one decode) is one traversal of the activation graph
+and costs the plan's ``e_total``; consecutive steps are greedily grouped so
+each cycle (E_s + steps) fits the energy budget. This is O(n) bookkeeping,
+not a partitioner solve — the *intra*-step segmentation already fits Q by
+construction of the table, so a single step over budget still forms a legal
+one-step cycle.
+
+CLI (offline build)::
+
+    python -m repro.launch.planner --arch qwen3-4b \
+        --buckets 2x24,2x48 --q-points 16 --out plan_qwen.npz
+
+builds the Q grid from the buckets' own Q_min .. E_total(whole-app) range
+(plus an unbounded entry), solves the whole grid in one batched engine call,
+and writes the versioned table.
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import Dict, List, Optional, Tuple, Union
+
+import numpy as np
+
+from ..configs import SMOKE_CONFIGS, get_config
+from ..configs.base import ModelConfig
+from ..core.layer_profile import lower_config, profile_model, build_activation_graph
+from ..core.offload import OffloadPlan, price_offload_bounds
+from ..core.partition import q_min, whole_app_partition, within_budget
+from ..core.plan_table import (
+    PlanTable,
+    PlanTableError,
+    SegmentPlan,
+    build_plan_table,
+    _default_cost,
+)
+from ..core.remat_policy import RematPlan, remat_from_bounds
+
+__all__ = ["ServePlanner", "as_planner", "request_cycles", "build_table_for_arch"]
+
+
+def resolve_config(arch: str, smoke: bool = True) -> ModelConfig:
+    """The same (arch, smoke) → ModelConfig mapping serve.py uses."""
+    return SMOKE_CONFIGS[arch] if smoke else get_config(arch)
+
+
+class ServePlanner:
+    """O(1) plan lookups for the serving loop, with observability counters."""
+
+    def __init__(self, table: PlanTable) -> None:
+        self.table = table
+        self.stats: Dict[str, int] = {"lookups": 0}
+
+    @classmethod
+    def from_file(cls, path: str) -> "ServePlanner":
+        return cls(PlanTable.load(path))
+
+    @property
+    def e_startup(self) -> float:
+        return self.table.e_startup
+
+    def plan_for(
+        self, batch: int, seq: int, energy_budget: Optional[float] = None
+    ) -> SegmentPlan:
+        """Bucket the request shape and return the precomputed plan."""
+        self.stats["lookups"] += 1
+        return self.table.lookup(batch, seq, energy_budget)
+
+    # -- derived consumers (no DP solve; bounds come from the table) --------
+
+    def _memory_plan(
+        self, cfg: ModelConfig, batch: int, seq: int, hbm_budget: float
+    ) -> Tuple[SegmentPlan, list, object]:
+        if self.table.kind != "memory":
+            raise PlanTableError(
+                f"offload/remat derivation needs a kind='memory' table, "
+                f"this one is kind={self.table.kind!r}"
+            )
+        if cfg.name != self.table.arch:
+            raise PlanTableError(
+                f"table was built for {self.table.arch!r}, not {cfg.name!r}"
+            )
+        plan = self.plan_for(batch, seq, hbm_budget)
+        profiles, long_lived = profile_model(cfg, plan.batch, plan.seq_bucket)
+        mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
+        return plan, profiles, mem_graph
+
+    def offload_plan(
+        self, cfg: ModelConfig, batch: int, seq: int, hbm_budget: float
+    ) -> OffloadPlan:
+        """Tabulated bounds priced as a PCIe offload schedule."""
+        plan, profiles, mem_graph = self._memory_plan(cfg, batch, seq, hbm_budget)
+        return price_offload_bounds(
+            cfg.name, profiles, mem_graph, list(plan.bounds), hbm_budget
+        )
+
+    def remat_plan(
+        self, cfg: ModelConfig, batch: int, seq: int, hbm_budget: float
+    ) -> RematPlan:
+        """Tabulated bounds priced as remat segment boundaries."""
+        plan, profiles, mem_graph = self._memory_plan(cfg, batch, seq, hbm_budget)
+        return remat_from_bounds(
+            cfg.name, profiles, mem_graph, list(plan.bounds), hbm_budget
+        )
+
+    def pipeline_cuts(
+        self, batch: int, seq: int, energy_budget: Optional[float] = None
+    ) -> Tuple[int, ...]:
+        """Interior segment ends of the looked-up plan — stage cut points."""
+        return self.plan_for(batch, seq, energy_budget).cut_points
+
+
+def as_planner(obj: Union[str, PlanTable, ServePlanner]) -> ServePlanner:
+    """Coerce a path / table / planner into a ServePlanner."""
+    if isinstance(obj, ServePlanner):
+        return obj
+    if isinstance(obj, PlanTable):
+        return ServePlanner(obj)
+    if isinstance(obj, str):
+        return ServePlanner.from_file(obj)
+    raise TypeError(f"cannot make a ServePlanner from {type(obj).__name__}")
+
+
+def request_cycles(
+    n_steps: int,
+    step_energy: float,
+    energy_budget: Optional[float] = None,
+    e_startup: float = 0.0,
+) -> List[Tuple[int, int]]:
+    """Greedy grouping of token steps into energy-bounded cycles (1-based).
+
+    Uses the shared solver tolerance (:func:`within_budget`) so a request
+    whose steps exactly fill the budget is not split by float noise. With no
+    budget the whole request is one cycle; a single step that alone exceeds
+    the budget still forms its own cycle (its interior segmentation fits Q by
+    table construction).
+    """
+    if n_steps <= 0:
+        return []
+    if energy_budget is None:
+        return [(1, n_steps)]
+    bounds: List[Tuple[int, int]] = []
+    start = 1
+    acc = e_startup + step_energy  # step `start` is always admitted
+    for k in range(2, n_steps + 1):
+        if within_budget(acc + step_energy, energy_budget):
+            acc += step_energy
+        else:
+            bounds.append((start, k - 1))
+            start = k
+            acc = e_startup + step_energy
+    bounds.append((start, n_steps))
+    return bounds
+
+
+def build_table_for_arch(
+    arch: str,
+    shape_buckets: List[Tuple[int, int]],
+    n_q: int = 16,
+    *,
+    smoke: bool = True,
+    kind: str = "time",
+    cache_dir: Optional[str] = None,
+) -> PlanTable:
+    """Convenience offline build: derive the Q grid from the buckets.
+
+    The grid spans [min over buckets of Q_min, max whole-app E_total × 1.05]
+    geometrically plus one unbounded entry, so every bucket has both
+    fully-julienned and single-cycle plans tabulated.
+    """
+    cfg = resolve_config(arch, smoke)
+    cm = _default_cost(kind)
+    graphs = [lower_config(cfg, batch=b, seq=s, kind=kind)
+              for (b, s) in shape_buckets]
+    lo = min(q_min(g, cm) for g in graphs)
+    hi = max(whole_app_partition(g, cm).e_total * 1.05 for g in graphs)
+    qs: List[Optional[float]] = list(np.geomspace(lo, max(hi, lo * 1.0001), n_q))
+    qs.append(None)
+    return build_plan_table(
+        cfg, shape_buckets, qs, kind=kind, cost=cm, cache_dir=cache_dir,
+        graphs=graphs,
+    )
+
+
+def _parse_buckets(text: str) -> List[Tuple[int, int]]:
+    out = []
+    for part in text.split(","):
+        b, s = part.lower().split("x")
+        out.append((int(b), int(s)))
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--buckets", default="2x24,2x48",
+                    help="comma-separated BATCHxSEQ buckets, e.g. 2x24,4x48")
+    ap.add_argument("--q-points", type=int, default=16,
+                    help="geometric Q grid size (an unbounded point is added)")
+    ap.add_argument("--kind", choices=("time", "memory"), default="time")
+    ap.add_argument("--out", required=True, help="output .npz path")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config instead of the smoke config")
+    args = ap.parse_args(argv)
+
+    buckets = _parse_buckets(args.buckets)
+    t0 = time.time()
+    table = build_table_for_arch(
+        args.arch, buckets, args.q_points, smoke=not args.full, kind=args.kind
+    )
+    table.save(args.out)
+    print(f"[planner] built {table.summary()} in {time.time() - t0:.2f}s "
+          f"→ {args.out}")
+    for b, (batch, seq) in enumerate(table.buckets()):
+        plan = table.plan_at(b, table.q_index(None))
+        print(f"[planner]   {plan.summary()}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,19 +1,37 @@
-"""Batched serving driver: prefill + decode with sequence-sharded KV caches.
+"""Batched serving driver: prefill + decode with sequence-sharded KV caches,
+optionally scheduled from a precomputed plan table.
 
 Serves a batch of prompts: one prefill step builds the padded KV cache
 (recurrent state for SSM/hybrid archs), then greedy decode steps extend it.
 On CPU this drives the smoke configs; the same path lowers for the
 production meshes (decode_32k / long_500k dry-run cells).
 
+With ``--plan-table`` the request is **energy-bounded**: the request shape
+is bucketed into a :class:`repro.core.plan_table.PlanTable` (an O(1) lookup
+— zero partitioner solves, zero jit retraces on the request path, pinned by
+tests/test_serve_plan.py), the token steps are grouped into cycles that fit
+``--energy-budget``, and the whole request executes as a task graph through
+:class:`repro.core.runtime.BurstRuntime`: every cycle boundary commits the
+decode state to NVM, so a mid-request power failure resumes from the last
+committed cycle instead of restarting the request. Scheduling changes,
+results never do: planned and unplanned serving produce identical token
+sequences.
+
 Usage:
     python -m repro.launch.serve --arch qwen3-4b --prompt-len 32 --gen 16
+    python -m repro.launch.planner --arch qwen3-4b --buckets 2x24,2x48 \
+        --out plan.npz
+    python -m repro.launch.serve --arch qwen3-4b --batch 2 --prompt-len 8 \
+        --gen 8 --plan-table plan.npz --energy-budget 0.5
 """
 
 from __future__ import annotations
 
 import argparse
+import functools
 import sys
 import time
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -25,11 +43,202 @@ from ..models.sharding import rules_for
 from .mesh import make_host_mesh
 from .steps import make_constrain
 
+# Trace-time counters for the planned request path (incremented only when
+# XLA actually re-traces; the serving regression test pins these at zero
+# across repeated planned requests of the same shape).
+TRACE_COUNT = {"prefill": 0, "decode": 0}
+
+
+@functools.lru_cache(maxsize=None)
+def _host_mesh():
+    """One mesh object per process: jit caches are keyed on the ambient
+    mesh, so re-creating it per request would defeat the no-retrace path."""
+    return make_host_mesh()
+
+
+def _resolve(arch: str, smoke: bool):
+    return SMOKE_CONFIGS[arch] if smoke else get_config(arch)
+
+
+@functools.lru_cache(maxsize=None)
+def _step_fns(arch: str, smoke: bool, max_seq: int):
+    """Cached jitted (prefill, decode) for the planned path.
+
+    Cached per (arch, smoke, max_seq) so repeated requests reuse the same
+    compiled executables. Deliberately **no cache donation**: a replayed
+    cycle must be able to re-read the committed cache from NVM, and donation
+    would invalidate it (donation changes performance, never values, so the
+    unplanned fast path keeps it).
+    """
+    cfg = _resolve(arch, smoke)
+    cons = make_constrain(rules_for(cfg.family))
+
+    def _prefill(params, batch):
+        TRACE_COUNT["prefill"] += 1
+        return api.prefill(cfg, params, batch, max_seq, constrain=cons)
+
+    def _decode(params, cache, tok, pos):
+        TRACE_COUNT["decode"] += 1
+        return api.decode_step(cfg, params, cache, tok, pos, constrain=cons)
+
+    return jax.jit(_prefill), jax.jit(_decode)
+
+
+def _pre_batch(cfg, prompts) -> Dict[str, Any]:
+    batch = int(np.shape(prompts)[0])
+    out: Dict[str, Any] = {"tokens": prompts}
+    if cfg.family == "vlm":
+        out["vision"] = jnp.zeros(
+            (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
+    if cfg.family == "encdec":
+        out["audio"] = jnp.zeros(
+            (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+    return out
+
+
+def _cache_nbytes(cfg, batch: int, max_seq: int) -> int:
+    cache, _ = api.cache_shape(cfg, batch, max_seq)
+    return int(
+        sum(
+            int(np.prod(leaf.shape)) * np.dtype(leaf.dtype).itemsize
+            for leaf in jax.tree.leaves(cache)
+        )
+    )
+
+
+def _request_graph(cfg, params, batch, prompt_len, gen, max_seq,
+                   prefill_fn, decode_fn, step_energy):
+    """The request as a Ladybirds task graph: task 1 = prefill (emits token
+    1), task k = decode step k (emits token k). Each task reads the previous
+    decode state packet and writes the next (SSA); the final task writes the
+    ``sequence`` output. Task bodies are pure functions of their declared
+    inputs — the cached jitted steps are deterministic — so replayed cycles
+    are idempotent, exactly the contract BurstRuntime's recovery relies on.
+    """
+    from ..core import GraphBuilder
+
+    b = GraphBuilder()
+    b.packet("prompts", batch * prompt_len * 4, external=True)
+    state_bytes = _cache_nbytes(cfg, batch, max_seq) + batch * 4
+    for k in range(gen - 1):
+        b.packet(f"state{k}", state_bytes)
+    b.packet("sequence", batch * gen * 4, keep=True)
+
+    def emit(k: int, cache, tok, seq: np.ndarray) -> Dict[str, Any]:
+        if k == gen - 1:
+            return {"sequence": seq}
+        return {f"state{k}": {"cache": cache, "tok": tok, "seq": seq}}
+
+    def mk_prefill():
+        def fn(inp):
+            logits, cache = prefill_fn(params, _pre_batch(cfg, inp["prompts"]))
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            return emit(0, cache, tok, np.asarray(tok))
+        return fn
+
+    def mk_decode(k: int):
+        def fn(inp):
+            st = inp[f"state{k - 1}"]
+            logits, cache = decode_fn(
+                params, st["cache"], st["tok"], jnp.int32(prompt_len + k - 1)
+            )
+            tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
+            seq = np.concatenate([st["seq"], np.asarray(tok)], axis=1)
+            return emit(k, cache, tok, seq)
+        return fn
+
+    b.task("prefill", reads=("prompts",),
+           writes=("sequence",) if gen == 1 else ("state0",),
+           cost=step_energy, fn=mk_prefill())
+    for k in range(1, gen):
+        b.task(f"decode{k}", reads=(f"state{k - 1}",),
+               writes=("sequence",) if k == gen - 1 else (f"state{k}",),
+               cost=step_energy, fn=mk_decode(k))
+    return b.build()
+
+
+def _serve_planned(arch, batch, prompt_len, gen, smoke, seed,
+                   plan_table, energy_budget, nvm, crash_hook, report):
+    from ..core import BurstRuntime, CostModel, LinearTransfer, Partition
+    from ..core.burst import burst_detail
+    from ..core.plan_table import PlanTableError
+    from .planner import as_planner, request_cycles
+
+    planner = as_planner(plan_table)
+    cfg = _resolve(arch, smoke)
+    if planner.table.arch != cfg.name:
+        raise PlanTableError(
+            f"plan table was built for {planner.table.arch!r} but this "
+            f"request is for {cfg.name!r}"
+        )
+    max_seq = prompt_len + gen
+    plan = planner.plan_for(batch, max_seq, energy_budget)
+
+    mesh = _host_mesh()
+    with mesh:
+        params, _ = api.init_params(cfg, jax.random.PRNGKey(seed),
+                                    max_seq=max_seq)
+        prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                     (batch, prompt_len), 0, cfg.vocab)
+        prefill_fn, decode_fn = _step_fns(arch, smoke, max_seq)
+        graph = _request_graph(cfg, params, batch, prompt_len, gen, max_seq,
+                               prefill_fn, decode_fn, step_energy=plan.e_total)
+        cycles = request_cycles(gen, plan.e_total, energy_budget,
+                                e_startup=planner.e_startup)
+        cost = CostModel(e_startup=planner.e_startup,
+                         read=LinearTransfer(0.0, 0.0),
+                         write=LinearTransfer(0.0, 0.0),
+                         name="request-cycles")
+        part = Partition(
+            cycles, [burst_detail(graph, cost, i, j) for (i, j) in cycles], None
+        )
+        rt = BurstRuntime(graph, part, nvm=nvm, cost=cost,
+                          crash_hook=crash_hook)
+        t0 = time.time()
+        out = rt.run_to_completion({"prompts": np.asarray(prompts)})
+        dt = time.time() - t0
+        seqs = jnp.asarray(out["sequence"])
+        print(f"[serve] {arch}: planned batch={batch} "
+              f"prefill({prompt_len} tok)+{gen - 1} decode steps in "
+              f"{len(cycles)} energy cycles ({dt * 1e3:.1f} ms total); "
+              f"plan: {plan.summary()}")
+        print(f"[serve] first sequences: {np.asarray(seqs)[:2, :8]}")
+        if report is not None:
+            report.update(
+                plan=plan, cycles=list(cycles), runtime_stats=rt.stats,
+                planner_stats=dict(planner.stats), nvm=rt.nvm,
+            )
+        return seqs
+
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool = True,
-          seed: int = 0):
-    cfg = SMOKE_CONFIGS[arch] if smoke else get_config(arch)
-    mesh = make_host_mesh()
+          seed: int = 0, plan_table=None, energy_budget: Optional[float] = None,
+          nvm=None, crash_hook=None, report: Optional[dict] = None):
+    """Serve one batched request.
+
+    ``plan_table`` (path / PlanTable / ServePlanner) switches to the
+    energy-bounded planned path described in the module docstring; ``nvm``
+    and ``crash_hook`` are forwarded to the BurstRuntime so tests can inject
+    power failures mid-request, and ``report`` (a dict) receives the plan,
+    cycle bounds, and runtime stats.
+    """
+    if gen < 1:
+        raise ValueError("gen must be >= 1 (prefill emits the first token)")
+    if plan_table is not None:
+        return _serve_planned(arch, batch, prompt_len, gen, smoke, seed,
+                              plan_table, energy_budget, nvm, crash_hook,
+                              report)
+    planned_only = {"energy_budget": energy_budget, "nvm": nvm,
+                    "crash_hook": crash_hook, "report": report}
+    misused = [k for k, v in planned_only.items() if v is not None]
+    if misused:
+        raise ValueError(
+            f"{misused} require plan_table: without a plan table there are "
+            "no energy cycles, NVM commits, or crash resumability"
+        )
+
+    cfg = _resolve(arch, smoke)
+    mesh = _host_mesh()
     rules = rules_for(cfg.family)
     cons = make_constrain(rules)
     max_seq = prompt_len + gen
@@ -38,13 +247,7 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool = True,
         params, _ = api.init_params(cfg, jax.random.PRNGKey(seed), max_seq=max_seq)
         prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
                                      (batch, prompt_len), 0, cfg.vocab)
-        pre_batch = {"tokens": prompts}
-        if cfg.family == "vlm":
-            pre_batch["vision"] = jnp.zeros(
-                (batch, cfg.n_vision_tokens, cfg.d_model), jnp.bfloat16)
-        if cfg.family == "encdec":
-            pre_batch["audio"] = jnp.zeros(
-                (batch, cfg.n_audio_frames, cfg.d_model), jnp.bfloat16)
+        pre_batch = _pre_batch(cfg, prompts)
 
         t0 = time.time()
         prefill = jax.jit(lambda p, b: api.prefill(cfg, p, b, max_seq,
@@ -79,8 +282,16 @@ def main(argv=None) -> int:
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen", type=int, default=16)
     ap.add_argument("--full", action="store_true")
+    ap.add_argument("--plan-table", default=None,
+                    help="precomputed PlanTable (.npz) — enables the "
+                         "energy-bounded planned path")
+    ap.add_argument("--energy-budget", type=float, default=None,
+                    help="per-cycle energy budget (units of the table's "
+                         "cost model; default: unbounded)")
     args = ap.parse_args(argv)
-    serve(args.arch, args.batch, args.prompt_len, args.gen, smoke=not args.full)
+    serve(args.arch, args.batch, args.prompt_len, args.gen,
+          smoke=not args.full, plan_table=args.plan_table,
+          energy_budget=args.energy_budget)
     return 0
 
 

@@ -1,0 +1,126 @@
+"""Serving regression: the plan-table path changes scheduling, never results.
+
+* ``serve()`` with and without ``plan_table`` produces identical token
+  sequences on two smoke archs (different families);
+* the planned request path does **zero partitioner solves** and **zero jit
+  retraces** across repeated requests (trace/solve counters pinned);
+* an energy budget splits the request into multiple committed cycles, and a
+  mid-request power failure resumes from the last committed cycle boundary
+  with identical output tokens.
+"""
+
+import numpy as np
+import pytest
+
+from repro.core import MemoryNVM, PowerFailure
+from repro.core import partition_jax
+from repro.core.plan_table import PlanTableError
+from repro.launch import serve as serve_mod
+from repro.launch.planner import ServePlanner, build_table_for_arch
+from repro.launch.serve import serve
+
+pytestmark = pytest.mark.slow  # XLA model compiles; fast job skips these
+
+ARCHS = ["qwen3-4b", "xlstm-1.3b"]  # dense GQA + SSM
+BATCH, PROMPT, GEN = 2, 8, 6
+MAX_SEQ = PROMPT + GEN
+
+
+@pytest.fixture(scope="module")
+def tables():
+    return {
+        arch: build_table_for_arch(arch, [(BATCH, MAX_SEQ), (BATCH, 2 * MAX_SEQ)],
+                                   n_q=8)
+        for arch in ARCHS
+    }
+
+
+@pytest.fixture(scope="module")
+def plain_tokens():
+    return {
+        arch: np.asarray(serve(arch, BATCH, PROMPT, GEN)) for arch in ARCHS
+    }
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_planned_tokens_identical_to_unplanned(arch, tables, plain_tokens):
+    rep = {}
+    planned = serve(arch, BATCH, PROMPT, GEN, plan_table=tables[arch],
+                    report=rep)
+    np.testing.assert_array_equal(plain_tokens[arch], np.asarray(planned))
+    assert rep["cycles"] == [(1, GEN)]  # unbounded budget: one cycle
+    assert rep["runtime_stats"].bursts_run == 1
+    assert rep["planner_stats"]["lookups"] == 1
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_plan_lookup_adds_zero_retraces_and_zero_solves(
+    arch, tables, plain_tokens
+):
+    planner = ServePlanner(tables[arch])
+    first = serve(arch, BATCH, PROMPT, GEN, plan_table=planner)
+    traces = dict(serve_mod.TRACE_COUNT)
+    solves = dict(partition_jax.SOLVE_COUNT)
+    dp_traces = partition_jax.TRACE_COUNT["dp_sweep"]
+    for _ in range(2):
+        again = serve(arch, BATCH, PROMPT, GEN, plan_table=planner)
+        np.testing.assert_array_equal(np.asarray(first), np.asarray(again))
+    assert dict(serve_mod.TRACE_COUNT) == traces, "request path re-traced"
+    assert dict(partition_jax.SOLVE_COUNT) == solves, "request path re-solved"
+    assert partition_jax.TRACE_COUNT["dp_sweep"] == dp_traces
+    assert planner.stats["lookups"] == 3  # but every request did look up
+    np.testing.assert_array_equal(plain_tokens[arch], np.asarray(first))
+
+
+def test_energy_budget_splits_into_committed_cycles(tables, plain_tokens):
+    arch = ARCHS[0]
+    table = tables[arch]
+    plan = table.lookup(BATCH, MAX_SEQ, None)
+    budget = plan.e_total * 2.2 + table.e_startup  # ~2 steps per cycle
+    rep = {}
+    planned = serve(arch, BATCH, PROMPT, GEN, plan_table=table,
+                    energy_budget=budget, report=rep)
+    np.testing.assert_array_equal(plain_tokens[arch], np.asarray(planned))
+    assert len(rep["cycles"]) == 3
+    assert rep["runtime_stats"].bursts_run == 3
+    assert rep["nvm"].read_index() == 3
+    # modeled energy: 3 activations + GEN activation-graph traversals
+    expect = 3 * table.e_startup + GEN * plan.e_total
+    assert rep["runtime_stats"].energy == pytest.approx(expect, rel=1e-12)
+
+
+def test_crash_mid_request_resumes_from_committed_cycle(tables, plain_tokens):
+    arch = ARCHS[0]
+    table = tables[arch]
+    plan = table.lookup(BATCH, MAX_SEQ, None)
+    budget = plan.e_total * 2.2 + table.e_startup
+
+    class CrashOnce:
+        def __init__(self):
+            self.fired = 0
+            self.sites = []
+
+        def __call__(self, b, phase):
+            self.sites.append((b, phase))
+            if b == 1 and phase == "executed" and not self.fired:
+                self.fired += 1
+                raise PowerFailure("injected mid-request")
+
+    hook = CrashOnce()
+    rep = {}
+    planned = serve(arch, BATCH, PROMPT, GEN, plan_table=table,
+                    energy_budget=budget, nvm=MemoryNVM(), crash_hook=hook,
+                    report=rep)
+    assert hook.fired == 1
+    np.testing.assert_array_equal(plain_tokens[arch], np.asarray(planned))
+    st = rep["runtime_stats"]
+    assert st.bursts_run == 3                 # each cycle committed once
+    assert st.tasks_run > GEN                 # cycle 1 replayed after the crash
+    # resume replayed burst 1, not burst 0: cycle 0's commit survived
+    assert (0, "loaded") in hook.sites
+    assert hook.sites.count((0, "loaded")) == 1
+
+
+def test_table_arch_mismatch_raises(tables):
+    with pytest.raises(PlanTableError):
+        serve(ARCHS[1], BATCH, PROMPT, GEN, plan_table=tables[ARCHS[0]])
