@@ -32,6 +32,16 @@ import os
 import sys
 import time
 
+# The sharded-DSE section wants an emulated multi-device host. jax locks the
+# device count at first initialization (same constraint as launch/dryrun.py),
+# so when that section was explicitly requested and the operator didn't pick
+# their own topology, set the flag before anything imports jax.
+if "XLA_FLAGS" not in os.environ and any(
+    a == "plan_table_sharded" or a.endswith("=plan_table_sharded")
+    for a in sys.argv[1:]
+):
+    os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
+
 import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
@@ -265,6 +275,26 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
         f.write("\n")
 
 
+def _merge_bench_json(path, new_rows, **meta):
+    """Read-modify-write a BENCH json: sections share one trend file, so a
+    plan_table run must not clobber the plan_table_sharded rows (or vice
+    versa) — rows merge by name, metadata keys overwrite."""
+    data = {}
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+        except (OSError, json.JSONDecodeError):
+            data = {}
+    rows = data.get("rows", {})
+    rows.update(new_rows)
+    data.update(meta)
+    data["rows"] = rows
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
 def plan_table_bench(smoke=False, json_out=None):
     """Plan-table serving subsystem: offline build cost vs online lookup.
 
@@ -324,9 +354,106 @@ def plan_table_bench(smoke=False, json_out=None):
     path = json_out or os.path.join(
         os.path.dirname(__file__), "BENCH_plan_table.json"
     )
-    with open(path, "w") as f:
-        json.dump({"smoke": bool(smoke), "rows": records}, f, indent=2)
-        f.write("\n")
+    _merge_bench_json(path, records, smoke=bool(smoke))
+
+
+def plan_table_sharded(smoke=False, json_out=None):
+    """Sharded DSE: multi-device plan-table builds + incremental extension.
+
+    The ROADMAP-scale sweep: 10⁵ Q points × 100 graph variants (100 (batch,
+    seq) buckets of the *full* qwen3-4b config — a production bucket fleet)
+    solved once single-host and once Q-sharded across an 8-device mesh
+    (emulated via ``XLA_FLAGS=--xla_force_host_platform_device_count=8``,
+    which this script sets itself when the section is requested). Rows pin
+    the acceptance bit — the sharded table is byte-identical to the
+    single-host one — plus build timings, and the incremental-extension
+    path: growing the fleet by one batch row re-solves only the new cells
+    (SOLVE_COUNT-verified) instead of rebuilding the world. ``--smoke``
+    shrinks the grid for CI. Rows merge into BENCH_plan_table.json.
+    """
+    import jax
+
+    from repro.configs import get_config
+    from repro.core import partition_jax as pj
+    from repro.core.plan_table import (
+        _default_cost, build_plan_table, extend_plan_table, shard_plan_table)
+    from repro.launch.mesh import shard_devices
+    from repro.launch.planner import derive_q_grid, lower_buckets
+
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    arch = "qwen3-4b"
+    cfg = get_config(arch)
+    if smoke:
+        batches, seqs, n_q, shards = [2, 4], [64, 128, 256], 511, 4
+    else:
+        batches = [1, 2, 4, 8, 16]
+        seqs = [128 * k for k in range(1, 21)]  # 128..2560
+        n_q, shards = 99_999, 8
+    buckets = [(b, s) for b in batches for s in seqs]
+    cm = _default_cost("time")
+    graphs = lower_buckets(cfg, buckets, "time")
+    qs = derive_q_grid(graphs, cm, n_q)  # +1 unbounded entry
+    n_dev = len(jax.local_devices())
+    row("plan_table_sharded.grid", f"{len(buckets)}x{len(qs)}",
+        f"buckets x Q points, {arch} full config ({graphs[0].n_tasks} tasks)")
+    row("plan_table_sharded.devices", n_dev,
+        f"{shards} shards; pmap needs devices >= shards, else seq fallback")
+
+    t0 = time.time()
+    single = build_plan_table(cfg, buckets, qs, cost=cm, graphs=graphs)
+    t_single = time.time() - t0
+    row("plan_table_sharded.single_host_build_s", f"{t_single:.2f}",
+        "one batched engine call + vectorized assembly")
+    t0 = time.time()
+    sharded = shard_plan_table(cfg, buckets, qs, n_shards=shards,
+                               devices=shard_devices(shards), cost=cm,
+                               graphs=graphs)
+    t_shard = time.time() - t0
+    row("plan_table_sharded.sharded_build_s", f"{t_shard:.2f}",
+        f"{shards}-way Q-shard "
+        f"({'pmap mesh' if n_dev >= shards else 'sequential fallback'})")
+    row("plan_table_sharded.byte_identical",
+        int(sharded.content_digest() == single.content_digest()),
+        "acceptance: 1 (sharded == single-host bytes)")
+    row("plan_table_sharded.table_MB", f"{single.nbytes() / 1e6:.1f}",
+        f"{int(single.feasible.sum())} feasible plans")
+
+    # Incremental extension: grow the fleet by one batch row without
+    # re-solving the existing cells.
+    n_keep = len(buckets) - len(seqs)
+    base = build_plan_table(cfg, buckets[:n_keep], qs, cost=cm,
+                            graphs=graphs[:n_keep])
+    solves0 = dict(pj.SOLVE_COUNT)
+    t0 = time.time()
+    ext = extend_plan_table(base, cfg, add_buckets=buckets[n_keep:], cost=cm)
+    t_ext = time.time() - t0
+    delta = {k: pj.SOLVE_COUNT[k] - solves0[k] for k in solves0}
+    row("plan_table_sharded.extend_s", f"{t_ext:.2f}",
+        f"+{len(buckets) - n_keep} buckets x {len(qs)} Q appended")
+    row("plan_table_sharded.extend_engine_calls", sum(delta.values()),
+        "solves for the new cells only (old cells byte-moved)")
+    row("plan_table_sharded.extend_matches_fresh",
+        int(ext.content_digest() == single.content_digest()),
+        "acceptance: 1 (incremental == fresh bytes)")
+    row("plan_table_sharded.extend_speedup", f"{t_single / max(t_ext, 1e-9):.1f}",
+        "full rebuild / incremental extension")
+    solves0 = dict(pj.SOLVE_COUNT)
+    untouched = extend_plan_table(ext, cfg, add_buckets=buckets, cost=cm)
+    n_calls = sum(pj.SOLVE_COUNT[k] - solves0[k] for k in solves0)
+    if untouched is not ext:  # must be the base object, not a rebuild
+        n_calls = -1
+    row("plan_table_sharded.untouched_extend_solves", n_calls,
+        "acceptance: 0 (re-extend of an untouched base never re-solves)")
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_plan_table.json"
+    )
+    _merge_bench_json(path, records, sharded_smoke=bool(smoke))
 
 
 def julienne_planners():
@@ -404,6 +531,7 @@ SECTIONS = {
     "partition_jax": partition_jax_engine,
     "partition_sweep": partition_sweep,
     "plan_table": plan_table_bench,
+    "plan_table_sharded": plan_table_sharded,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -429,7 +557,7 @@ def main(argv=None) -> None:
         fn = SECTIONS[name]
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
-        elif name == "plan_table":
+        elif name in ("plan_table", "plan_table_sharded"):
             fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()

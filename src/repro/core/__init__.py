@@ -64,6 +64,9 @@ from .plan_table import (
     UnknownBucketError,
     build_plan_table,
     config_fingerprint,
+    extend_plan_table,
+    probe_plan_table,
+    shard_plan_table,
 )
 from .runtime import (
     BurstRuntime,
@@ -82,6 +85,8 @@ _JAX_EXPORTS = (
     "JaxSweep",
     "sweep_jax",
     "sweep_jax_batched",
+    "sweep_jax_sharded",
+    "shard_q_grid",
     "optimal_partition_jax",
     "sweep_from_columns",
 )

@@ -91,6 +91,8 @@ __all__ = [
     "JaxSweep",
     "sweep_jax",
     "sweep_jax_batched",
+    "sweep_jax_sharded",
+    "shard_q_grid",
     "optimal_partition_jax",
     "sweep_from_columns",
     "cost_scalars",
@@ -115,8 +117,9 @@ TRACE_COUNT = {"dp_sweep": 0}
 
 # Host-side solve counters (incremented per engine entry, cached or not):
 # the plan-table serving tests pin "zero partitioner solves on the request
-# path" against these.
-SOLVE_COUNT = {"sweep_jax": 0, "sweep_jax_batched": 0}
+# path" against these, and the DSE tests pin "extending an untouched table
+# never re-solves existing cells".
+SOLVE_COUNT = {"sweep_jax": 0, "sweep_jax_batched": 0, "sweep_jax_sharded": 0}
 
 
 # ---------------------------------------------------------------------------
@@ -592,6 +595,186 @@ def sweep_jax_batched(
                 feasible=np.asarray(feasible[b]),
                 starts=np.asarray(starts[b]),
             )
+    return out  # type: ignore[return-value]
+
+
+# ---------------------------------------------------------------------------
+# Sharded (multi-device) sweeps — the offline DSE path
+# ---------------------------------------------------------------------------
+#
+# The per-Q DP rows are fully independent (dp[q, j] only ever reads dp[q, ·]),
+# so the Q grid is the natural shard axis for the offline design-space
+# exploration: each device solves every graph for a contiguous Q chunk, and
+# the gathered columns are bit-identical to the single-call solve. The pmap
+# wrapper below maps the shard axis over devices; when fewer devices exist
+# than shards (e.g. the fast test tier on one CPU device), the same padded
+# chunks run sequentially through ``_dp_sweep_vmap`` — same decomposition,
+# same bytes (asserted by tests/test_dse_shard.py on 1/2/4/8 devices).
+
+
+def shard_q_grid(n_q: int, n_shards: int) -> List[Tuple[int, int]]:
+    """Balanced contiguous ``[start, stop)`` chunks covering ``range(n_q)``.
+
+    The first ``n_q % n_shards`` chunks are one element longer; ``n_shards``
+    is clamped so every chunk is non-empty.
+    """
+    if n_q < 1:
+        raise ValueError("shard_q_grid needs at least one Q point")
+    if n_shards < 1:
+        raise ValueError(f"n_shards must be >= 1, got {n_shards}")
+    n_shards = min(n_shards, n_q)
+    base, rem = divmod(n_q, n_shards)
+    edges = [0]
+    for s in range(n_shards):
+        edges.append(edges[-1] + base + (1 if s < rem else 0))
+    return list(zip(edges[:-1], edges[1:]))
+
+
+@functools.lru_cache(maxsize=None)
+def _dp_sweep_pmap(devices: tuple):
+    """pmap of the vmapped engine over a leading Q-shard axis.
+
+    Graph arrays, task counts, and cost scalars broadcast (``in_axes=None``);
+    only the ``(n_shards, q_pad)`` Q grid is mapped. Cached per device tuple
+    (jax Devices are hashable); pmap itself caches per shape.
+    """
+    return jax.pmap(
+        jax.vmap(_dp_sweep, in_axes=(0, 0, None, None)),
+        in_axes=(None, None, None, 0),
+        devices=devices,
+    )
+
+
+def _pad_q_shards(
+    qs_np: np.ndarray, chunks: Sequence[Tuple[int, int]]
+) -> np.ndarray:
+    """Stack Q chunks into one rectangle, padding short chunks by repeating
+    their last value (padded rows are solved and discarded — per-Q rows are
+    independent, so they cannot perturb the real columns)."""
+    q_pad = max(hi - lo for (lo, hi) in chunks)
+    out = np.empty((len(chunks), q_pad), dtype=np.float64)
+    for s, (lo, hi) in enumerate(chunks):
+        out[s, : hi - lo] = qs_np[lo:hi]
+        out[s, hi - lo :] = qs_np[hi - 1]
+    return out
+
+
+def _merge_sweeps(
+    q_values: Sequence[Optional[float]],
+    chunk_sweeps: Sequence[Sequence[JaxSweep]],
+) -> List[JaxSweep]:
+    """Concatenate per-chunk JaxSweeps (chunk-major) back into full-grid ones."""
+    out: List[JaxSweep] = []
+    for g in range(len(chunk_sweeps[0])):
+        parts = [cs[g] for cs in chunk_sweeps]
+        out.append(
+            JaxSweep(
+                n_tasks=parts[0].n_tasks,
+                q_values=list(q_values),
+                dp=np.concatenate([p.dp for p in parts], axis=0),
+                parent=np.concatenate([p.parent for p in parts], axis=0),
+                e_total=np.concatenate([p.e_total for p in parts], axis=0),
+                feasible=np.concatenate([p.feasible for p in parts], axis=0),
+                starts=np.concatenate([p.starts for p in parts], axis=0),
+            )
+        )
+    return out
+
+
+def sweep_jax_sharded(
+    graphs: Sequence[AnyExport],
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    n_shards: int,
+    devices: Optional[Sequence] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> List[JaxSweep]:
+    """Q-grid-sharded :func:`sweep_jax_batched`: same results, many devices.
+
+    The Q grid splits into ``n_shards`` contiguous chunks
+    (:func:`shard_q_grid`); every device solves all graphs for one chunk and
+    the gathered columns are **bit-identical** to the single-call batched
+    solve (per-Q DP independence — the differential tier pins this).
+
+    Scan backend: chunks pad to a common width and run under one
+    ``pmap(vmap(...))`` when ``len(devices) >= n_shards``, else sequentially
+    through the same vmapped kernel (one compile either way). Pallas/CSR
+    backend (or a mixed ``auto`` batch): chunks run as host-side
+    ``sweep_jax_batched`` calls — the kernel lanes the Q axis itself, so
+    chunked solves are already bit-stable there.
+    """
+    SOLVE_COUNT["sweep_jax_sharded"] += 1
+    qs_np = _qs_array(q_values)
+    chunks = shard_q_grid(qs_np.shape[0], n_shards)
+    if not graphs:
+        return []
+
+    resolved = {_select_backend(g, backend) for g in graphs}
+    arrays = [_as_arrays(g) for g in graphs] if resolved == {"scan"} else None
+    if arrays is None:
+        # CSR/Pallas (or mixed) batch: host-sharded chunk loop.
+        qs_list = list(q_values)
+        chunk_sweeps = [
+            sweep_jax_batched(
+                graphs, cost, qs_list[lo:hi], backend=backend,
+                interpret=interpret,
+            )
+            for (lo, hi) in chunks
+        ]
+        return _merge_sweeps(q_values, chunk_sweeps)
+
+    out: List[Optional[JaxSweep]] = [None] * len(arrays)
+    nonempty = [(k, a) for k, a in enumerate(arrays) if a.n_tasks > 0]
+    for k, a in enumerate(arrays):
+        if a.n_tasks == 0:
+            out[k] = _empty_sweep(q_values)
+    if not nonempty:
+        return out  # type: ignore[return-value]
+
+    stacked = stack_graph_arrays([a for _, a in nonempty])
+    qs_sh = _pad_q_shards(qs_np, chunks)
+    devs = tuple(devices) if devices is not None else tuple(jax.local_devices())
+    with enable_x64():
+        ga = _ga_dict(stacked)
+        nt = jnp.asarray(stacked.n_tasks, dtype=jnp.int32)
+        cv = _cost_vec(cost)
+        if len(chunks) > 1 and len(devs) >= len(chunks):
+            fn = _dp_sweep_pmap(devs[: len(chunks)])
+            shard_outs = fn(ga, nt, cv, jnp.asarray(qs_sh))
+            per_shard = [
+                tuple(np.asarray(o[s]) for o in shard_outs)
+                for s in range(len(chunks))
+            ]
+        else:
+            # Device-starved fallback: same padded chunks, same vmapped
+            # kernel, run back to back — bit-identical by construction.
+            per_shard = [
+                tuple(
+                    np.asarray(o)
+                    for o in _dp_sweep_vmap(ga, nt, cv, jnp.asarray(qs_sh[s]))
+                )
+                for s in range(len(chunks))
+            ]
+
+    for b, (k, a) in enumerate(nonempty):
+        def _cat(i: int) -> np.ndarray:
+            return np.concatenate(
+                [per_shard[s][i][b, : hi - lo]
+                 for s, (lo, hi) in enumerate(chunks)],
+                axis=0,
+            )
+
+        out[k] = JaxSweep(
+            n_tasks=int(a.n_tasks),
+            q_values=list(q_values),
+            dp=_cat(0),
+            parent=_cat(1),
+            e_total=_cat(2),
+            feasible=_cat(3),
+            starts=_cat(4),
+        )
     return out  # type: ignore[return-value]
 
 

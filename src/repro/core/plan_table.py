@@ -25,6 +25,27 @@ config fingerprint; :func:`PlanTable.load` refuses stale versions
 by the fingerprint, so a table built for one (config, buckets, Q grid, cost
 model) can never silently serve another.
 
+Design-space exploration at scale (the sharded DSE subsystem):
+
+* :func:`shard_plan_table` partitions the Q grid across a device mesh
+  (:func:`repro.core.partition_jax.sweep_jax_sharded`, pmap over emulated or
+  real devices) and gathers per-shard columns into one table whose content is
+  **byte-identical** to the single-host :func:`build_plan_table` result
+  (compare with :meth:`PlanTable.content_digest`);
+* :func:`extend_plan_table` appends new buckets / Q points to an existing
+  table *without re-solving any existing cell* — copied cells are byte-moved,
+  only the genuinely new (bucket, Q) cells hit the engine, and the header's
+  ``lineage`` fingerprint chain records each extension step;
+* :func:`probe_plan_table` is the load-time staleness probe: it re-solves K
+  random cells against the live engine and raises :class:`StaleTableError`
+  on any bit mismatch (or on a mismatched engine config).
+
+Tables are **canonical**: buckets sort by (batch, seq) and the Q grid sorts
+ascending (unbounded last) at build time, so the same design-space *set* —
+built single-host, sharded, or grown through any order of incremental
+extensions — produces the same payload bytes (the differential/property tier
+in tests/test_dse_shard.py pins this).
+
 Bit-exactness contract (tested in tests/test_plan_table.py): a table lookup
 returns bounds bit-identical to a direct :func:`optimal_partition_jax` solve
 of the same (graph, cost, Q) — the batched build pads graphs to a common
@@ -58,15 +79,20 @@ __all__ = [
     "SegmentPlan",
     "PlanTable",
     "build_plan_table",
+    "shard_plan_table",
+    "extend_plan_table",
+    "probe_plan_table",
     "config_fingerprint",
     "BUILD_STATS",
 ]
 
-PLAN_TABLE_VERSION = 1
+# v2: canonical bucket/Q ordering + the `lineage` fingerprint chain in the
+# header (incremental-extension provenance). v1 tables must be rebuilt.
+PLAN_TABLE_VERSION = 2
 
 # Offline-build observability (tests assert the fingerprint cache short-
-# circuits the solve): bumped by build_plan_table only.
-BUILD_STATS = {"built": 0, "cache_hits": 0}
+# circuits the solve and that extensions never rebuild existing cells).
+BUILD_STATS = {"built": 0, "cache_hits": 0, "extended": 0}
 
 
 class PlanTableError(ValueError):
@@ -74,7 +100,8 @@ class PlanTableError(ValueError):
 
 
 class StaleTableError(PlanTableError):
-    """On-disk table was written by an incompatible format version."""
+    """On-disk table is from an incompatible format version, or the staleness
+    probe found a cell that no longer matches the live engine."""
 
 
 class UnknownBucketError(PlanTableError, KeyError):
@@ -133,6 +160,47 @@ def _q_list(q_values: Sequence[Optional[float]]) -> List[Optional[float]]:
     return out
 
 
+def _q_key(q: Optional[float]) -> float:
+    return np.inf if q is None else float(q)
+
+
+def _canonical_grid(
+    shape_buckets: Sequence[Tuple[int, int]],
+    q_values: Sequence[Optional[float]],
+    graphs: Optional[Sequence[TaskGraph]] = None,
+) -> Tuple[List[Tuple[int, int]], List[Optional[float]],
+           Optional[List[TaskGraph]]]:
+    """Validate and canonically order the design-space grid.
+
+    Buckets sort by (batch, seq); Q values sort ascending with the unbounded
+    entry last. Pre-lowered ``graphs`` (one per bucket, caller order) are
+    permuted alongside their buckets. The canonical order is what makes the
+    table content a pure function of the design-space *set* — sharded builds
+    and shuffled incremental extensions land on identical bytes.
+    """
+    buckets = [(int(b), int(s)) for (b, s) in shape_buckets]
+    if not buckets:
+        raise PlanTableError("shape_buckets is empty")
+    if len(set(buckets)) != len(buckets):
+        raise PlanTableError(f"duplicate shape buckets in {buckets}")
+    qs = _q_list(q_values)
+    if not qs:
+        raise PlanTableError("q_values is empty")
+    keys = [_q_key(q) for q in qs]
+    if len(set(keys)) != len(keys):
+        raise PlanTableError(f"duplicate Q values in {q_values}")
+    if graphs is not None and len(graphs) != len(buckets):
+        raise PlanTableError(
+            f"{len(graphs)} pre-lowered graphs for {len(buckets)} buckets"
+        )
+    order = sorted(range(len(buckets)), key=lambda i: buckets[i])
+    buckets = [buckets[i] for i in order]
+    if graphs is not None:
+        graphs = [graphs[i] for i in order]
+    qs = [qs[i] for i in np.argsort(np.asarray(keys), kind="stable")]
+    return buckets, qs, graphs
+
+
 def config_fingerprint(
     cfg: ModelConfig,
     shape_buckets: Sequence[Tuple[int, int]],
@@ -143,14 +211,17 @@ def config_fingerprint(
     """Content hash keying the build cache and pinning table identity.
 
     Covers everything the solved plans depend on: the full ModelConfig, the
-    bucket list, the Q grid (exact float reprs), the cost interpretation
+    bucket set, the Q grid (exact float reprs), the cost interpretation
     (``kind``) and the cost-model scalars, plus the table format version.
+    Buckets and Q values are hashed in canonical (sorted) order, so the
+    fingerprint is a function of the design-space *set*, not the call order.
     """
+    qs = sorted(_q_key(q) for q in _q_list(q_values))
     payload = {
         "version": PLAN_TABLE_VERSION,
         "cfg": dataclasses.asdict(cfg),
-        "buckets": [[int(b), int(s)] for (b, s) in shape_buckets],
-        "q_grid": [None if q is None else q.hex() for q in _q_list(q_values)],
+        "buckets": sorted([int(b), int(s)] for (b, s) in shape_buckets),
+        "q_grid": [None if np.isinf(q) else q.hex() for q in qs],
         "kind": kind,
         "cost": {"name": cost.name, "scalars": [c.hex() for c in cost_scalars(cost)]},
     }
@@ -161,8 +232,9 @@ def config_fingerprint(
 class PlanTable:
     """Immutable (bucket × Q) grid of precomputed segment plans.
 
-    Construct via :func:`build_plan_table` or :meth:`load`; query via
-    :meth:`lookup`. Storage is flat-ragged: entry ``(b, k)`` owns segment rows
+    Construct via :func:`build_plan_table` / :func:`shard_plan_table` /
+    :func:`extend_plan_table` or :meth:`load`; query via :meth:`lookup`.
+    Storage is flat-ragged: entry ``(b, k)`` owns segment rows
     ``seg_ptr[b*nq+k] : seg_ptr[b*nq+k+1]`` of ``seg_start``/``seg_end``/
     ``cycle_energy`` (the CSR idiom the engine already uses for graphs).
     """
@@ -213,6 +285,12 @@ class PlanTable:
         return self.header["fingerprint"]
 
     @property
+    def lineage(self) -> List[str]:
+        """Fingerprint chain: the fresh-build fingerprint followed by one
+        entry per :func:`extend_plan_table` step (extension provenance)."""
+        return list(self.header.get("lineage", [self.fingerprint]))
+
+    @property
     def e_startup(self) -> float:
         """E_s of the cost model the table was priced under."""
         return float(self.header["cost_scalars"][0])
@@ -232,6 +310,36 @@ class PlanTable:
 
     def q_values(self) -> List[Optional[float]]:
         return [None if np.isinf(q) else float(q) for q in self.q_grid]
+
+    _PAYLOAD = (
+        "bucket_batch", "bucket_seq", "n_tasks", "q_grid", "feasible",
+        "e_total", "seg_ptr", "seg_start", "seg_end", "cycle_energy",
+    )
+
+    def content_digest(self) -> str:
+        """sha256 over the table *content*: the identity header fields plus
+        every payload array's dtype, shape, and raw bytes.
+
+        Two tables with equal digests store bit-identical plans for the same
+        design space under the same engine config. Build-provenance header
+        fields (``lineage``, ``backend``) are excluded — a design space built
+        single-host, sharded across 8 devices, or grown through any order of
+        incremental extensions is *content-identical* by construction, and
+        this digest is how the differential tier asserts that.
+        """
+        ident = {
+            k: self.header[k]
+            for k in ("version", "arch", "kind", "cost_name", "cost_scalars",
+                      "fingerprint")
+        }
+        h = hashlib.sha256(
+            json.dumps(ident, sort_keys=True, separators=(",", ":")).encode()
+        )
+        for name in self._PAYLOAD:
+            a = getattr(self, name)
+            h.update(f"{name}:{a.dtype.str}:{a.shape}".encode())
+            h.update(np.ascontiguousarray(a).tobytes())
+        return h.hexdigest()
 
     # -- lookup ------------------------------------------------------------
 
@@ -313,16 +421,7 @@ class PlanTable:
                 np.savez(
                     fh,
                     header=np.array(json.dumps(self.header, sort_keys=True)),
-                    bucket_batch=self.bucket_batch,
-                    bucket_seq=self.bucket_seq,
-                    n_tasks=self.n_tasks,
-                    q_grid=self.q_grid,
-                    feasible=self.feasible,
-                    e_total=self.e_total,
-                    seg_ptr=self.seg_ptr,
-                    seg_start=self.seg_start,
-                    seg_end=self.seg_end,
-                    cycle_energy=self.cycle_energy,
+                    **{name: getattr(self, name) for name in self._PAYLOAD},
                 )
             os.replace(tmp, path)
         except BaseException:
@@ -344,31 +443,10 @@ class PlanTable:
                     f"{path}: table version {version} != supported "
                     f"{PLAN_TABLE_VERSION}; rebuild with build_plan_table()"
                 )
-            return cls(
-                header=header,
-                bucket_batch=z["bucket_batch"],
-                bucket_seq=z["bucket_seq"],
-                n_tasks=z["n_tasks"],
-                q_grid=z["q_grid"],
-                feasible=z["feasible"],
-                e_total=z["e_total"],
-                seg_ptr=z["seg_ptr"],
-                seg_start=z["seg_start"],
-                seg_end=z["seg_end"],
-                cycle_energy=z["cycle_energy"],
-            )
+            return cls(header=header, **{name: z[name] for name in cls._PAYLOAD})
 
     def nbytes(self) -> int:
-        return int(
-            sum(
-                a.nbytes
-                for a in (
-                    self.bucket_batch, self.bucket_seq, self.n_tasks,
-                    self.q_grid, self.feasible, self.e_total, self.seg_ptr,
-                    self.seg_start, self.seg_end, self.cycle_energy,
-                )
-            )
-        )
+        return int(sum(getattr(self, name).nbytes for name in self._PAYLOAD))
 
     def summary(self) -> str:
         feas = int(self.feasible.sum())
@@ -381,6 +459,255 @@ class PlanTable:
 
 def _default_cost(kind: str) -> CostModel:
     return memory_cost_model() if kind == "memory" else tpu_host_offload_model()
+
+
+# ---------------------------------------------------------------------------
+# Cell blocks: vectorized (bucket × Q) assembly shared by build/shard/extend
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class _CellBlock:
+    """Flat-ragged per-cell data: cell ``c`` owns segment rows
+    ``ptr[c]:ptr[c+1]``. Cells are bucket-major, Q-minor."""
+
+    feasible: np.ndarray
+    e_total: np.ndarray
+    ptr: np.ndarray
+    start: np.ndarray
+    end: np.ndarray
+    energy: np.ndarray
+
+
+def _segments_for_sweep(graph: TaskGraph, cm: CostModel, res) -> _CellBlock:
+    """Vectorized extraction of one graph's (nq) cells from a JaxSweep.
+
+    Replaces the per-cell Python loop (bounds reconstruction + burst pricing
+    per (bucket, Q)) with array ops over the ``starts`` matrix — the segment
+    rows come out in the same (Q-major, start-ascending) order and burst
+    energies are priced once per distinct (i, j) pair, so the bytes are
+    unchanged while 10⁵-Q builds stop being host-bound.
+    """
+    n = int(res.n_tasks)
+    nq = len(res.q_values)
+    feas = np.asarray(res.feasible, dtype=bool).copy()
+    e_tot = np.where(feas, np.asarray(res.e_total, dtype=np.float64), np.inf)
+    if n == 0:
+        # An empty graph is trivially feasible everywhere with zero segments.
+        return _CellBlock(
+            feasible=feas,
+            e_total=np.where(feas, 0.0, np.inf),
+            ptr=np.zeros(nq + 1, dtype=np.int64),
+            start=np.zeros(0, dtype=np.int32),
+            end=np.zeros(0, dtype=np.int32),
+            energy=np.zeros(0, dtype=np.float64),
+        )
+    sub = np.asarray(res.starts[:, 1 : n + 1], dtype=bool) & feas[:, None]
+    q_idx, i0 = np.nonzero(sub)  # row-major: Q-major, start-ascending
+    starts = (i0 + 1).astype(np.int32)
+    nseg = starts.shape[0]
+    # end of segment s = next start in the same Q row - 1, else n_tasks
+    same_row = np.zeros(nseg, dtype=bool)
+    if nseg:
+        same_row[:-1] = q_idx[1:] == q_idx[:-1]
+    nxt = np.empty(nseg, dtype=np.int32)
+    if nseg:
+        nxt[:-1] = starts[1:] - 1
+        nxt[-1] = 0
+    ends = np.where(same_row, nxt, np.int32(n))
+    counts = sub.sum(axis=1).astype(np.int64)
+    ptr = np.zeros(nq + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    if nseg:
+        pairs = starts.astype(np.int64) * (n + 2) + ends.astype(np.int64)
+        uniq, inv = np.unique(pairs, return_inverse=True)
+        priced = np.array(
+            [burst_cost(graph, cm, int(p // (n + 2)), int(p % (n + 2)))
+             for p in uniq],
+            dtype=np.float64,
+        )
+        energy = priced[inv]
+    else:
+        energy = np.zeros(0, dtype=np.float64)
+    return _CellBlock(
+        feasible=feas, e_total=e_tot, ptr=ptr,
+        start=starts, end=ends, energy=energy,
+    )
+
+
+def _block_from_sweeps(
+    graphs: Sequence[TaskGraph], cm: CostModel, sweeps: Sequence
+) -> _CellBlock:
+    return _block_concat(
+        [_segments_for_sweep(g, cm, res) for g, res in zip(graphs, sweeps)]
+    )
+
+
+def _block_from_table(table: PlanTable) -> _CellBlock:
+    return _CellBlock(
+        feasible=table.feasible.reshape(-1),
+        e_total=table.e_total.reshape(-1),
+        ptr=table.seg_ptr,
+        start=table.seg_start,
+        end=table.seg_end,
+        energy=table.cycle_energy,
+    )
+
+
+def _block_concat(blocks: Sequence[_CellBlock]) -> _CellBlock:
+    ptr = np.zeros(sum(b.ptr.shape[0] - 1 for b in blocks) + 1, dtype=np.int64)
+    pos, off = 1, 0
+    for b in blocks:
+        nc = b.ptr.shape[0] - 1
+        ptr[pos : pos + nc] = b.ptr[1:] + off
+        pos += nc
+        off += int(b.ptr[-1])
+    return _CellBlock(
+        feasible=np.concatenate([b.feasible for b in blocks]),
+        e_total=np.concatenate([b.e_total for b in blocks]),
+        ptr=ptr,
+        start=np.concatenate([b.start for b in blocks]),
+        end=np.concatenate([b.end for b in blocks]),
+        energy=np.concatenate([b.energy for b in blocks]),
+    )
+
+
+def _block_gather(block: _CellBlock, order: np.ndarray) -> _CellBlock:
+    """Reorder ragged cells: cell ``c`` of the result is cell ``order[c]``
+    of ``block`` (the standard CSR row-gather, fully vectorized)."""
+    counts = np.diff(block.ptr)[order]
+    ptr = np.zeros(order.shape[0] + 1, dtype=np.int64)
+    np.cumsum(counts, out=ptr[1:])
+    total = int(ptr[-1])
+    idx = (
+        np.repeat(block.ptr[:-1][order], counts)
+        + np.arange(total, dtype=np.int64)
+        - np.repeat(ptr[:-1], counts)
+    )
+    return _CellBlock(
+        feasible=block.feasible[order],
+        e_total=block.e_total[order],
+        ptr=ptr,
+        start=block.start[idx],
+        end=block.end[idx],
+        energy=block.energy[idx],
+    )
+
+
+def _finish_table(
+    cfg: ModelConfig,
+    kind: str,
+    cm: CostModel,
+    fp: str,
+    backend: str,
+    buckets: Sequence[Tuple[int, int]],
+    qs: Sequence[Optional[float]],
+    n_tasks: Sequence[int],
+    block: _CellBlock,
+    lineage: Sequence[str],
+) -> PlanTable:
+    nb, nq = len(buckets), len(qs)
+    header = {
+        "version": PLAN_TABLE_VERSION,
+        "arch": cfg.name,
+        "kind": kind,
+        "cost_name": cm.name,
+        "cost_scalars": cost_scalars(cm).tolist(),
+        "fingerprint": fp,
+        "backend": backend,
+        "lineage": list(lineage),
+    }
+    return PlanTable(
+        header=header,
+        bucket_batch=np.array([b for (b, _) in buckets], dtype=np.int64),
+        bucket_seq=np.array([s for (_, s) in buckets], dtype=np.int64),
+        n_tasks=np.asarray(n_tasks, dtype=np.int64),
+        q_grid=np.array([_q_key(q) for q in qs], dtype=np.float64),
+        feasible=block.feasible.reshape(nb, nq),
+        e_total=block.e_total.reshape(nb, nq),
+        seg_ptr=block.ptr,
+        seg_start=block.start,
+        seg_end=block.end,
+        cycle_energy=block.energy,
+    )
+
+
+def _cache_lookup(cache_dir: Optional[str], fp: str, lineage: Sequence[str]):
+    """(cache_path, hit-or-None) for a fingerprint-keyed on-disk cache.
+
+    A hit must match the caller's expected ``lineage`` too: content is a
+    pure function of the fingerprint, but provenance is not — a fresh build
+    must not serve a cached extension's multi-link chain (or vice versa), so
+    a lineage mismatch is treated as a miss and rebuilt in place.
+    """
+    if cache_dir is None:
+        return None, None
+    cache_path = os.path.join(cache_dir, f"plan_{fp[:16]}.npz")
+    if os.path.exists(cache_path):
+        try:
+            table = PlanTable.load(cache_path)
+            if table.fingerprint == fp and table.lineage == list(lineage):
+                return cache_path, table
+        except PlanTableError:
+            pass  # stale/corrupt cache entry: rebuild
+    return cache_path, None
+
+
+def _resolve_cfg(cfg: Union[ModelConfig, str]) -> ModelConfig:
+    if isinstance(cfg, str):
+        from ..configs import get_config
+
+        return get_config(cfg)
+    return cfg
+
+
+# ---------------------------------------------------------------------------
+# Builders
+# ---------------------------------------------------------------------------
+
+
+def _build_table(
+    cfg: Union[ModelConfig, str],
+    shape_buckets: Sequence[Tuple[int, int]],
+    q_values: Sequence[Optional[float]],
+    *,
+    kind: str,
+    cost: Optional[CostModel],
+    backend: str,
+    cache_dir: Optional[str],
+    graphs: Optional[Sequence[TaskGraph]],
+    n_shards: Optional[int],
+    devices: Optional[Sequence],
+) -> PlanTable:
+    from .partition_jax import sweep_jax_batched, sweep_jax_sharded  # lazy
+
+    cfg = _resolve_cfg(cfg)
+    buckets, qs, graphs = _canonical_grid(shape_buckets, q_values, graphs)
+    cm = cost if cost is not None else _default_cost(kind)
+    fp = config_fingerprint(cfg, buckets, qs, kind, cm)
+
+    cache_path, cached = _cache_lookup(cache_dir, fp, [fp])
+    if cached is not None:
+        BUILD_STATS["cache_hits"] += 1
+        return cached
+
+    if graphs is None:
+        graphs = [lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets]
+    if n_shards is None:
+        sweeps = sweep_jax_batched(graphs, cm, qs, backend=backend)
+    else:
+        sweeps = sweep_jax_sharded(
+            graphs, cm, qs, n_shards=n_shards, devices=devices, backend=backend
+        )
+    table = _finish_table(
+        cfg, kind, cm, fp, backend, buckets, qs,
+        [g.n_tasks for g in graphs], _block_from_sweeps(graphs, cm, sweeps),
+        lineage=[fp],
+    )
+    BUILD_STATS["built"] += 1
+    if cache_path is not None:
+        table.save(cache_path)
+    return table
 
 
 def build_plan_table(
@@ -404,93 +731,265 @@ def build_plan_table(
     :func:`config_fingerprint` — a prior table for the identical inputs is
     loaded instead of re-solved, and stale or mismatched files are rebuilt in
     place. ``graphs``, if given, must be the buckets' own
-    ``lower_config(cfg, b, s, kind=kind)`` results (one per bucket, in
-    order) — callers that already lowered them (e.g. to derive the Q grid)
-    skip the second lowering; identity is still pinned by the fingerprint
-    over (cfg, buckets, kind).
+    ``lower_config(cfg, b, s, kind=kind)`` results (one per bucket, in the
+    caller's bucket order) — callers that already lowered them (e.g. to
+    derive the Q grid) skip the second lowering; identity is still pinned by
+    the fingerprint over (cfg, buckets, kind). Buckets and Q values are
+    stored in canonical sorted order regardless of call order.
     """
-    from .partition_jax import sweep_jax_batched  # lazy: jax-heavy
-
-    if isinstance(cfg, str):
-        from ..configs import get_config
-
-        cfg = get_config(cfg)
-    buckets = [(int(b), int(s)) for (b, s) in shape_buckets]
-    if not buckets:
-        raise PlanTableError("shape_buckets is empty")
-    if len(set(buckets)) != len(buckets):
-        raise PlanTableError(f"duplicate shape buckets in {buckets}")
-    qs = _q_list(q_values)
-    if not qs:
-        raise PlanTableError("q_values is empty")
-    cm = cost if cost is not None else _default_cost(kind)
-    fp = config_fingerprint(cfg, buckets, qs, kind, cm)
-
-    cache_path = None
-    if cache_dir is not None:
-        cache_path = os.path.join(cache_dir, f"plan_{fp[:16]}.npz")
-        if os.path.exists(cache_path):
-            try:
-                table = PlanTable.load(cache_path)
-                if table.fingerprint == fp:
-                    BUILD_STATS["cache_hits"] += 1
-                    return table
-            except PlanTableError:
-                pass  # stale/corrupt cache entry: rebuild below
-
-    if graphs is None:
-        graphs = [lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets]
-    elif len(graphs) != len(buckets):
-        raise PlanTableError(
-            f"{len(graphs)} pre-lowered graphs for {len(buckets)} buckets"
-        )
-    sweeps = sweep_jax_batched(graphs, cm, qs, backend=backend)
-
-    nb, nq = len(buckets), len(qs)
-    feasible = np.zeros((nb, nq), dtype=bool)
-    e_total = np.full((nb, nq), np.inf, dtype=np.float64)
-    seg_ptr = np.zeros(nb * nq + 1, dtype=np.int64)
-    starts: List[int] = []
-    ends: List[int] = []
-    energies: List[float] = []
-    for b, (graph, res) in enumerate(zip(graphs, sweeps)):
-        for k in range(nq):
-            e = b * nq + k
-            bounds = res.bounds(k)
-            if bounds is not None:
-                feasible[b, k] = True
-                e_total[b, k] = float(res.e_total[k])
-                for (i, j) in bounds:
-                    starts.append(i)
-                    ends.append(j)
-                    energies.append(burst_cost(graph, cm, i, j))
-            seg_ptr[e + 1] = len(starts)
-
-    header = {
-        "version": PLAN_TABLE_VERSION,
-        "arch": cfg.name,
-        "kind": kind,
-        "cost_name": cm.name,
-        "cost_scalars": cost_scalars(cm).tolist(),
-        "fingerprint": fp,
-        "backend": backend,
-    }
-    table = PlanTable(
-        header=header,
-        bucket_batch=np.array([b for (b, _) in buckets], dtype=np.int64),
-        bucket_seq=np.array([s for (_, s) in buckets], dtype=np.int64),
-        n_tasks=np.array([g.n_tasks for g in graphs], dtype=np.int64),
-        q_grid=np.array(
-            [np.inf if q is None else q for q in qs], dtype=np.float64
-        ),
-        feasible=feasible,
-        e_total=e_total,
-        seg_ptr=seg_ptr,
-        seg_start=np.array(starts, dtype=np.int32),
-        seg_end=np.array(ends, dtype=np.int32),
-        cycle_energy=np.array(energies, dtype=np.float64),
+    return _build_table(
+        cfg, shape_buckets, q_values, kind=kind, cost=cost, backend=backend,
+        cache_dir=cache_dir, graphs=graphs, n_shards=None, devices=None,
     )
-    BUILD_STATS["built"] += 1
+
+
+def shard_plan_table(
+    cfg: Union[ModelConfig, str],
+    shape_buckets: Sequence[Tuple[int, int]],
+    q_values: Sequence[Optional[float]],
+    *,
+    n_shards: int,
+    devices: Optional[Sequence] = None,
+    kind: str = "time",
+    cost: Optional[CostModel] = None,
+    backend: str = "auto",
+    cache_dir: Optional[str] = None,
+    graphs: Optional[Sequence[TaskGraph]] = None,
+) -> PlanTable:
+    """Sharded offline build: the Q grid splits across ``n_shards`` devices
+    (:func:`repro.core.partition_jax.sweep_jax_sharded`) and the gathered
+    per-shard columns assemble into a table **byte-identical** to
+    :func:`build_plan_table` of the same inputs (same fingerprint, same
+    :meth:`PlanTable.content_digest` — the differential tier pins this on
+    1/2/4/8 emulated devices).
+
+    ``devices`` defaults to ``jax.local_devices()``; with fewer devices than
+    shards the same chunk decomposition runs sequentially (bit-identical
+    either way), so a shard count tuned for an 8-device host is safe to run
+    on a laptop. All other parameters match :func:`build_plan_table`.
+    """
+    return _build_table(
+        cfg, shape_buckets, q_values, kind=kind, cost=cost, backend=backend,
+        cache_dir=cache_dir, graphs=graphs, n_shards=int(n_shards),
+        devices=devices,
+    )
+
+
+def extend_plan_table(
+    base: Union[PlanTable, str],
+    cfg: Union[ModelConfig, str],
+    *,
+    add_buckets: Sequence[Tuple[int, int]] = (),
+    add_q_values: Sequence[Optional[float]] = (),
+    cost: Optional[CostModel] = None,
+    backend: str = "auto",
+    cache_dir: Optional[str] = None,
+    n_shards: Optional[int] = None,
+    devices: Optional[Sequence] = None,
+) -> PlanTable:
+    """Incrementally extend a table with new buckets and/or Q points.
+
+    Existing cells are **never re-solved**: their rows are byte-moved from
+    ``base`` (pinned by ``SOLVE_COUNT`` in the DSE tests), and only the new
+    (bucket, Q) cells hit the engine — one batched (or sharded, with
+    ``n_shards``) solve for new buckets over the final Q grid plus one for
+    old buckets over the new Q points. Additions already tabulated are
+    ignored, so re-extending an untouched base returns it unchanged with
+    zero engine calls.
+
+    The result is canonical: **bit-identical content** to a fresh
+    :func:`build_plan_table` of the final (bucket, Q) set, regardless of how
+    the set was split into extension steps or in what order they were applied
+    (the property tier shuffles them). The header's ``lineage`` chain gains
+    the final fingerprint, recording the extension provenance.
+    """
+    from .partition_jax import sweep_jax_batched, sweep_jax_sharded  # lazy
+
+    if isinstance(base, str):
+        base = PlanTable.load(base)
+    cfg = _resolve_cfg(cfg)
+    kind = base.kind
+    cm = cost if cost is not None else _default_cost(kind)
+    base_buckets = base.buckets()
+    base_qs = base.q_values()
+    fp_base = config_fingerprint(cfg, base_buckets, base_qs, kind, cm)
+    if fp_base != base.fingerprint:
+        raise PlanTableError(
+            f"base table fingerprint {base.fingerprint[:16]}… does not match "
+            f"this engine config (cfg={cfg.name!r}, kind={kind!r}, "
+            f"cost={cm.name!r} → {fp_base[:16]}…); refusing to extend"
+        )
+
+    old_b_index = {b: i for i, b in enumerate(base_buckets)}
+    old_q_index = {_q_key(q): i for i, q in enumerate(base_qs)}
+    new_buckets = []
+    for b in [(int(x), int(s)) for (x, s) in add_buckets]:
+        if b not in old_b_index and b not in new_buckets:
+            new_buckets.append(b)
+    new_qs = []
+    for q in _q_list(add_q_values):
+        if _q_key(q) not in old_q_index and _q_key(q) not in map(_q_key, new_qs):
+            new_qs.append(q)
+    if not new_buckets and not new_qs:
+        return base  # untouched: zero engine calls, zero re-solves
+
+    final_buckets, final_qs, _ = _canonical_grid(
+        base_buckets + new_buckets, base_qs + new_qs
+    )
+    new_qs = sorted(new_qs, key=_q_key)
+    fp = config_fingerprint(cfg, final_buckets, final_qs, kind, cm)
+    lineage = base.lineage + [fp]
+    cache_path, cached = _cache_lookup(cache_dir, fp, lineage)
+    if cached is not None:
+        BUILD_STATS["cache_hits"] += 1
+        return cached
+
+    def solve(graphs, qs):
+        if n_shards is None:
+            return sweep_jax_batched(graphs, cm, qs, backend=backend)
+        return sweep_jax_sharded(
+            graphs, cm, qs, n_shards=n_shards, devices=devices, backend=backend
+        )
+
+    new_buckets = sorted(new_buckets)
+    new_b_index = {b: i for i, b in enumerate(new_buckets)}
+    new_q_index = {_q_key(q): i for i, q in enumerate(new_qs)}
+    nq_f, nq_old, nq_new = len(final_qs), len(base_qs), len(new_qs)
+    nb_old = len(base_buckets)
+
+    # Pool: [base cells | new-bucket × final-Q cells | old-bucket × new-Q
+    # cells]; the gather below reorders it into canonical (bucket-major,
+    # Q-minor) cell order without touching any copied bytes.
+    blocks = [_block_from_table(base)]
+    off_newb = nb_old * nq_old
+    if new_buckets:
+        new_graphs = [
+            lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in new_buckets
+        ]
+        blocks.append(_block_from_sweeps(new_graphs, cm, solve(new_graphs, final_qs)))
+    off_oldq = off_newb + len(new_buckets) * nq_f
+    if new_qs:
+        old_graphs = [
+            lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in base_buckets
+        ]
+        blocks.append(_block_from_sweeps(old_graphs, cm, solve(old_graphs, new_qs)))
+    pool = _block_concat(blocks)
+
+    # Per-Q source row (same for every old bucket): base column or new-solve
+    # column — vectorized so the merge stays O(cells) in numpy, not Python.
+    q_keys = np.array([_q_key(q) for q in final_qs])
+    q_is_old = np.array([k in old_q_index for k in q_keys])
+    q_old_col = np.array([old_q_index.get(k, 0) for k in q_keys], dtype=np.int64)
+    q_new_col = np.array([new_q_index.get(k, 0) for k in q_keys], dtype=np.int64)
+    order = np.empty(len(final_buckets) * nq_f, dtype=np.int64)
+    for bf, bucket in enumerate(final_buckets):
+        row = slice(bf * nq_f, (bf + 1) * nq_f)
+        if bucket in old_b_index:
+            ob = old_b_index[bucket]
+            order[row] = np.where(
+                q_is_old,
+                ob * nq_old + q_old_col,
+                off_oldq + ob * nq_new + q_new_col,
+            )
+        else:
+            jb = new_b_index[bucket]
+            order[row] = off_newb + jb * nq_f + np.arange(nq_f)
+
+    n_tasks = [
+        int(base.n_tasks[old_b_index[b]]) if b in old_b_index
+        else new_graphs[new_b_index[b]].n_tasks
+        for b in final_buckets
+    ]
+    table = _finish_table(
+        cfg, kind, cm, fp, backend, final_buckets, final_qs, n_tasks,
+        _block_gather(pool, order), lineage=lineage,
+    )
+    BUILD_STATS["extended"] += 1
     if cache_path is not None:
         table.save(cache_path)
     return table
+
+
+# ---------------------------------------------------------------------------
+# Load-time staleness probe
+# ---------------------------------------------------------------------------
+
+
+def probe_plan_table(
+    table: PlanTable,
+    cfg: Union[ModelConfig, str],
+    *,
+    k: Optional[int] = 4,
+    seed: int = 0,
+    cost: Optional[CostModel] = None,
+    backend: str = "auto",
+) -> int:
+    """Re-validate ``k`` random cells against the live engine (``k=None``
+    probes every cell). Returns the number of probed cells.
+
+    Raises :class:`StaleTableError` when the table's fingerprint does not
+    match the given engine config (cfg / kind / cost-model scalars), or when
+    any probed cell's feasibility, e_total, bounds, or cycle energies differ
+    by even one bit from a fresh solve — the load-time guard for tables that
+    outlived an engine or cost-model change the version field can't see.
+    """
+    from .partition_jax import sweep_jax  # lazy: jax-heavy
+
+    cfg = _resolve_cfg(cfg)
+    cm = cost if cost is not None else _default_cost(table.kind)
+    fp = config_fingerprint(cfg, table.buckets(), table.q_values(), table.kind, cm)
+    if fp != table.fingerprint:
+        raise StaleTableError(
+            f"table fingerprint {table.fingerprint[:16]}… does not match the "
+            f"live engine config (cfg={cfg.name!r}, kind={table.kind!r}, "
+            f"cost={cm.name!r} → {fp[:16]}…)"
+        )
+    nb, nq = table.n_buckets, table.n_q
+    total = nb * nq
+    if k is None or k >= total:
+        cells = np.arange(total)
+    else:
+        if k < 1:
+            raise PlanTableError(f"probe needs k >= 1 cells, got {k}")
+        rng = np.random.default_rng(seed)
+        cells = np.sort(rng.choice(total, size=k, replace=False))
+
+    buckets = table.buckets()
+    qs = table.q_values()
+    for b in np.unique(cells // nq):
+        q_sel = [int(c % nq) for c in cells if c // nq == b]
+        batch, seq_b = buckets[int(b)]
+        graph = lower_config(cfg, batch=batch, seq=seq_b, kind=table.kind)
+        res = sweep_jax(graph, cm, [qs[j] for j in q_sel], backend=backend)
+        for qi, j in enumerate(q_sel):
+            where = f"cell (bucket {buckets[int(b)]}, Q={qs[j]})"
+            if graph.n_tasks != int(table.n_tasks[b]):
+                raise StaleTableError(
+                    f"stale {where}: n_tasks {table.n_tasks[b]} != "
+                    f"{graph.n_tasks} from the live lowering"
+                )
+            if bool(res.feasible[qi]) != bool(table.feasible[b, j]):
+                raise StaleTableError(
+                    f"stale {where}: feasibility flag differs from live solve"
+                )
+            if not res.feasible[qi]:
+                continue
+            plan = table.plan_at(int(b), j)
+            if float(res.e_total[qi]) != plan.e_total:
+                raise StaleTableError(
+                    f"stale {where}: e_total {plan.e_total!r} != live "
+                    f"{float(res.e_total[qi])!r}"
+                )
+            bounds = res.bounds(qi)
+            if list(plan.bounds) != bounds:
+                raise StaleTableError(
+                    f"stale {where}: bounds {list(plan.bounds)} != live {bounds}"
+                )
+            live_energy = tuple(
+                burst_cost(graph, cm, i, jj) for (i, jj) in bounds
+            )
+            if plan.cycle_energy != live_energy:
+                raise StaleTableError(
+                    f"stale {where}: cycle energies differ from live pricing"
+                )
+    return int(len(cells))

@@ -1,0 +1,207 @@
+"""Sharded design-space exploration: multi-device plan-table builds.
+
+The paper's Julienning flow is an offline DSE — solve the energy-bounded
+partition for every (application, E_burst) point of interest. This module is
+that flow at bucket-fleet scale: the (shape-bucket × Q-grid) work partitions
+across a device mesh (:func:`repro.launch.mesh.make_shard_mesh`; pmap over
+the Q-shard axis inside :func:`repro.core.partition_jax.sweep_jax_sharded`)
+and the gathered per-shard columns assemble into one versioned table whose
+content is byte-identical to a single-host :func:`build_plan_table` run.
+
+Growth is incremental: :func:`extend_for_arch` appends new shape buckets (and
+optionally new Q points) to an existing table without re-solving any tabulated
+cell, and the header's ``lineage`` fingerprint chain records each extension.
+On load, :func:`probe_table` re-validates K random cells against the live
+engine so a table that outlived an engine or cost-model change fails loudly
+(:class:`repro.core.plan_table.StaleTableError`) instead of serving stale
+plans.
+
+CLI::
+
+    # fresh sharded build (emulate a mesh with
+    # XLA_FLAGS=--xla_force_host_platform_device_count=8)
+    python -m repro.launch.dse --arch qwen3-4b --buckets 2x24,2x48 \
+        --q-points 16 --shards 8 --out plan_qwen.npz
+
+    # incremental: append a bucket + two Q points, no re-solve of old cells
+    python -m repro.launch.dse --arch qwen3-4b --buckets 2x24,2x48,4x48 \
+        --extend --add-q 1.5e-3,2.5e-3 --shards 8 --out plan_qwen.npz
+
+    # load-time staleness probe of an existing table (no rebuild)
+    python -m repro.launch.dse --arch qwen3-4b --probe-only --probe 8 \
+        --out plan_qwen.npz
+"""
+
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from typing import List, Optional, Sequence, Tuple, Union
+
+from ..core.plan_table import (
+    PlanTable,
+    extend_plan_table,
+    probe_plan_table,
+    shard_plan_table,
+    _default_cost,
+)
+from .mesh import shard_devices
+from .planner import _parse_buckets, derive_q_grid, lower_buckets, resolve_config
+
+__all__ = [
+    "build_sharded_table_for_arch",
+    "extend_for_arch",
+    "probe_table",
+]
+
+
+def build_sharded_table_for_arch(
+    arch: str,
+    shape_buckets: List[Tuple[int, int]],
+    n_q: int = 16,
+    *,
+    n_shards: int,
+    smoke: bool = True,
+    kind: str = "time",
+    cache_dir: Optional[str] = None,
+) -> PlanTable:
+    """Sharded sibling of :func:`repro.launch.planner.build_table_for_arch`:
+    same derived Q grid, same bytes, Q-sharded solve across the device mesh
+    (sequential same-decomposition fallback when the host has fewer devices
+    than shards)."""
+    cfg = resolve_config(arch, smoke)
+    cm = _default_cost(kind)
+    graphs = lower_buckets(cfg, shape_buckets, kind)
+    qs = derive_q_grid(graphs, cm, n_q)
+    return shard_plan_table(
+        cfg, shape_buckets, qs, n_shards=n_shards,
+        devices=shard_devices(n_shards), kind=kind, cost=cm,
+        cache_dir=cache_dir, graphs=graphs,
+    )
+
+
+def extend_for_arch(
+    base: Union[PlanTable, str],
+    arch: str,
+    shape_buckets: Sequence[Tuple[int, int]],
+    *,
+    add_q_values: Sequence[Optional[float]] = (),
+    smoke: bool = True,
+    n_shards: Optional[int] = None,
+    cache_dir: Optional[str] = None,
+) -> PlanTable:
+    """Extend an existing table with whatever of ``shape_buckets`` /
+    ``add_q_values`` it does not already tabulate (existing cells are
+    byte-moved, never re-solved). ``n_shards`` shards the extension solves."""
+    if isinstance(base, str):
+        base = PlanTable.load(base)
+    cfg = resolve_config(arch, smoke)
+    # extend_plan_table itself ignores already-tabulated buckets/Q points,
+    # so the full request list passes straight through.
+    return extend_plan_table(
+        base, cfg, add_buckets=shape_buckets, add_q_values=add_q_values,
+        n_shards=n_shards,
+        devices=None if n_shards is None else shard_devices(n_shards),
+        cache_dir=cache_dir,
+    )
+
+
+def probe_table(
+    table: Union[PlanTable, str],
+    arch: str,
+    *,
+    k: Optional[int] = 4,
+    seed: int = 0,
+    smoke: bool = True,
+) -> int:
+    """Load-time staleness probe by arch name (see
+    :func:`repro.core.plan_table.probe_plan_table`)."""
+    if isinstance(table, str):
+        table = PlanTable.load(table)
+    return probe_plan_table(table, resolve_config(arch, smoke), k=k, seed=seed)
+
+
+def _parse_q_list(text: str) -> List[float]:
+    return [float(part) for part in text.split(",") if part.strip()]
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3-4b")
+    ap.add_argument("--buckets", default="2x24,2x48",
+                    help="comma-separated BATCHxSEQ buckets, e.g. 2x24,4x48")
+    ap.add_argument("--q-points", type=int, default=None,
+                    help="geometric Q grid size, default 16 (an unbounded "
+                    "point is added; fresh builds only)")
+    ap.add_argument("--kind", choices=("time", "memory"), default=None,
+                    help="cost interpretation, default time (fresh builds "
+                    "only — an extension keeps the base table's kind)")
+    ap.add_argument("--shards", type=int, default=1,
+                    help="Q-grid shards (pmap across that many devices; "
+                    "sequential fallback when the host has fewer)")
+    ap.add_argument("--extend", action="store_true",
+                    help="extend the existing table at --out instead of "
+                    "rebuilding (only missing buckets/Q points are solved)")
+    ap.add_argument("--add-q", default="",
+                    help="comma-separated Q_max values to append (--extend)")
+    ap.add_argument("--probe", type=int, default=0,
+                    help="after build/load, re-validate this many random "
+                    "cells against the live engine")
+    ap.add_argument("--probe-only", action="store_true",
+                    help="only probe the existing table at --out — no build, "
+                    "no extend, nothing written")
+    ap.add_argument("--seed", type=int, default=0, help="probe cell RNG seed")
+    ap.add_argument("--out", required=True, help="table .npz path")
+    ap.add_argument("--full", action="store_true",
+                    help="use the full config instead of the smoke config")
+    args = ap.parse_args(argv)
+
+    import jax
+
+    buckets = _parse_buckets(args.buckets)
+    smoke = not args.full
+    if args.extend or args.probe_only:
+        # the base table fixes the grid parameters — refuse silent drops
+        if args.kind is not None or args.q_points is not None:
+            ap.error("--kind/--q-points are fixed by the existing table; "
+                     "not valid with --extend/--probe-only")
+    if args.probe_only:
+        n = probe_table(args.out, args.arch, k=args.probe or None,
+                        seed=args.seed, smoke=smoke)
+        print(f"[dse] probe: {n} cells of {args.out} re-validated against "
+              f"the live engine — clean")
+        return 0
+    t0 = time.time()
+    if args.extend:
+        table = extend_for_arch(
+            args.out, args.arch, buckets,
+            add_q_values=_parse_q_list(args.add_q),
+            smoke=smoke, n_shards=args.shards,
+        )
+        verb = "extended"
+    else:
+        if args.add_q:
+            ap.error("--add-q only makes sense with --extend")
+        table = build_sharded_table_for_arch(
+            args.arch, buckets, args.q_points or 16,
+            n_shards=args.shards, smoke=smoke, kind=args.kind or "time",
+        )
+        verb = "built"
+    table.save(args.out)
+    dt = time.time() - t0
+    print(f"[dse] {verb} {table.summary()} in {dt:.2f}s "
+          f"({args.shards} shards, {len(jax.local_devices())} devices) "
+          f"→ {args.out}")
+    print(f"[dse]   lineage: {' → '.join(f[:12] for f in table.lineage)}")
+    print(f"[dse]   digest:  {table.content_digest()[:16]}")
+    if args.probe:
+        n = probe_table(args.out, args.arch, k=args.probe, seed=args.seed,
+                        smoke=smoke)
+        print(f"[dse]   probe:   {n} cells re-validated against the live "
+              f"engine — clean")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

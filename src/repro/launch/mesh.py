@@ -11,10 +11,13 @@ Defined as functions so importing this module never touches jax device state
 
 from __future__ import annotations
 
+import numpy as np
+
 import jax
 from jax.sharding import Mesh
 
-__all__ = ["make_production_mesh", "make_host_mesh"]
+__all__ = ["make_production_mesh", "make_host_mesh", "make_shard_mesh",
+           "shard_devices"]
 
 
 def make_production_mesh(*, multi_pod: bool = False) -> Mesh:
@@ -29,3 +32,26 @@ def make_host_mesh() -> Mesh:
     if n >= 2:
         return jax.make_mesh((1, n), ("data", "model"))
     return jax.make_mesh((1, 1), ("data", "model"))
+
+
+def make_shard_mesh(n_shards: int) -> Mesh:
+    """1-axis ("shard",) mesh for the offline DSE sweep (launch/dse.py).
+
+    Uses the first ``n_shards`` local devices — on CI/laptops these are the
+    emulated host devices from ``--xla_force_host_platform_device_count``.
+    """
+    devs = jax.local_devices()
+    if len(devs) < n_shards:
+        raise ValueError(
+            f"need {n_shards} devices for a shard mesh, have {len(devs)}"
+        )
+    return Mesh(np.array(devs[:n_shards]), ("shard",))
+
+
+def shard_devices(n_shards: int):
+    """The DSE shard mesh's devices in shard order, or None when the host
+    has fewer than ``n_shards`` (callers then fall back to the sequential
+    same-decomposition path)."""
+    if len(jax.local_devices()) < n_shards:
+        return None
+    return list(make_shard_mesh(n_shards).devices.ravel())

@@ -30,7 +30,11 @@ CLI (offline build)::
 
 builds the Q grid from the buckets' own Q_min .. E_total(whole-app) range
 (plus an unbounded entry), solves the whole grid in one batched engine call,
-and writes the versioned table.
+and writes the versioned table. ``--shards N`` shards the solve across N
+devices (byte-identical output; see :mod:`repro.launch.dse`), ``--extend``
+grows an existing table in place without re-solving tabulated cells, and
+``--probe K`` re-validates K random cells against the live engine after the
+build (the load-time staleness check).
 """
 
 from __future__ import annotations
@@ -52,11 +56,20 @@ from ..core.plan_table import (
     PlanTableError,
     SegmentPlan,
     build_plan_table,
+    probe_plan_table,
+    shard_plan_table,
     _default_cost,
 )
 from ..core.remat_policy import RematPlan, remat_from_bounds
 
-__all__ = ["ServePlanner", "as_planner", "request_cycles", "build_table_for_arch"]
+__all__ = [
+    "ServePlanner",
+    "as_planner",
+    "request_cycles",
+    "build_table_for_arch",
+    "derive_q_grid",
+    "lower_buckets",
+]
 
 
 def resolve_config(arch: str, smoke: bool = True) -> ModelConfig:
@@ -72,8 +85,26 @@ class ServePlanner:
         self.stats: Dict[str, int] = {"lookups": 0}
 
     @classmethod
-    def from_file(cls, path: str) -> "ServePlanner":
-        return cls(PlanTable.load(path))
+    def from_file(
+        cls,
+        path: str,
+        *,
+        probe: Optional[Union[ModelConfig, str]] = None,
+        probe_k: Optional[int] = 4,
+        probe_seed: int = 0,
+        probe_cost=None,
+    ) -> "ServePlanner":
+        """Load a table; with ``probe`` (a ModelConfig or registry arch name),
+        re-validate ``probe_k`` random cells against the live engine first —
+        the load-time staleness check (raises
+        :class:`repro.core.plan_table.StaleTableError` on any bit drift).
+        ``probe_cost`` must name the table's cost model when it was built
+        with a non-default one (defaults per table kind)."""
+        table = PlanTable.load(path)
+        if probe is not None:
+            probe_plan_table(table, probe, k=probe_k, seed=probe_seed,
+                             cost=probe_cost)
+        return cls(table)
 
     @property
     def e_startup(self) -> float:
@@ -173,6 +204,26 @@ def request_cycles(
     return bounds
 
 
+def lower_buckets(
+    cfg: ModelConfig, shape_buckets: List[Tuple[int, int]], kind: str = "time"
+):
+    """One lowered activation graph per (batch, seq) bucket."""
+    return [lower_config(cfg, batch=b, seq=s, kind=kind)
+            for (b, s) in shape_buckets]
+
+
+def derive_q_grid(graphs, cm, n_q: int = 16) -> List[Optional[float]]:
+    """The standard offline Q grid for a bucket set: geometric from
+    [min over buckets of Q_min, max whole-app E_total × 1.05] plus one
+    unbounded entry, so every bucket has both fully-julienned and
+    single-cycle plans tabulated."""
+    lo = min(q_min(g, cm) for g in graphs)
+    hi = max(whole_app_partition(g, cm).e_total * 1.05 for g in graphs)
+    qs: List[Optional[float]] = list(np.geomspace(lo, max(hi, lo * 1.0001), n_q))
+    qs.append(None)
+    return qs
+
+
 def build_table_for_arch(
     arch: str,
     shape_buckets: List[Tuple[int, int]],
@@ -181,21 +232,25 @@ def build_table_for_arch(
     smoke: bool = True,
     kind: str = "time",
     cache_dir: Optional[str] = None,
+    n_shards: Optional[int] = None,
 ) -> PlanTable:
-    """Convenience offline build: derive the Q grid from the buckets.
-
-    The grid spans [min over buckets of Q_min, max whole-app E_total × 1.05]
-    geometrically plus one unbounded entry, so every bucket has both
-    fully-julienned and single-cycle plans tabulated.
+    """Convenience offline build: derive the Q grid from the buckets
+    (:func:`derive_q_grid`) and solve the whole grid in one batched engine
+    call — or, with ``n_shards``, one Q-sharded multi-device call
+    (:func:`repro.core.plan_table.shard_plan_table`; same bytes either way).
     """
     cfg = resolve_config(arch, smoke)
     cm = _default_cost(kind)
-    graphs = [lower_config(cfg, batch=b, seq=s, kind=kind)
-              for (b, s) in shape_buckets]
-    lo = min(q_min(g, cm) for g in graphs)
-    hi = max(whole_app_partition(g, cm).e_total * 1.05 for g in graphs)
-    qs: List[Optional[float]] = list(np.geomspace(lo, max(hi, lo * 1.0001), n_q))
-    qs.append(None)
+    graphs = lower_buckets(cfg, shape_buckets, kind)
+    qs = derive_q_grid(graphs, cm, n_q)
+    if n_shards is not None:
+        from .mesh import shard_devices  # jax device state: keep import local
+
+        return shard_plan_table(
+            cfg, shape_buckets, qs, n_shards=n_shards,
+            devices=shard_devices(n_shards), kind=kind, cost=cm,
+            cache_dir=cache_dir, graphs=graphs,
+        )
     return build_plan_table(
         cfg, shape_buckets, qs, kind=kind, cost=cm, cache_dir=cache_dir,
         graphs=graphs,
@@ -215,22 +270,54 @@ def main(argv=None) -> int:
     ap.add_argument("--arch", default="qwen3-4b")
     ap.add_argument("--buckets", default="2x24,2x48",
                     help="comma-separated BATCHxSEQ buckets, e.g. 2x24,4x48")
-    ap.add_argument("--q-points", type=int, default=16,
-                    help="geometric Q grid size (an unbounded point is added)")
-    ap.add_argument("--kind", choices=("time", "memory"), default="time")
+    ap.add_argument("--q-points", type=int, default=None,
+                    help="geometric Q grid size, default 16 (an unbounded "
+                    "point is added; fresh builds only)")
+    ap.add_argument("--kind", choices=("time", "memory"), default=None,
+                    help="cost interpretation, default time (fresh builds "
+                    "only — an extension keeps the base table's kind)")
     ap.add_argument("--out", required=True, help="output .npz path")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of the smoke config")
+    ap.add_argument("--shards", type=int, default=None,
+                    help="shard the solve across this many devices "
+                    "(byte-identical to the single-host build)")
+    ap.add_argument("--extend", action="store_true",
+                    help="extend the existing table at --out with any "
+                    "missing --buckets instead of rebuilding it")
+    ap.add_argument("--probe", type=int, default=0,
+                    help="re-validate this many random cells against the "
+                    "live engine after the build")
     args = ap.parse_args(argv)
 
     buckets = _parse_buckets(args.buckets)
     t0 = time.time()
-    table = build_table_for_arch(
-        args.arch, buckets, args.q_points, smoke=not args.full, kind=args.kind
-    )
+    if args.extend:
+        if args.kind is not None or args.q_points is not None:
+            ap.error("--kind/--q-points are fixed by the base table; "
+                     "not valid with --extend")
+        from .dse import extend_for_arch  # lazy: avoids a module cycle
+
+        table = extend_for_arch(
+            args.out, args.arch, buckets, smoke=not args.full,
+            n_shards=args.shards,
+        )
+        verb = "extended"
+    else:
+        table = build_table_for_arch(
+            args.arch, buckets, args.q_points or 16, smoke=not args.full,
+            kind=args.kind or "time", n_shards=args.shards,
+        )
+        verb = "built"
     table.save(args.out)
-    print(f"[planner] built {table.summary()} in {time.time() - t0:.2f}s "
-          f"→ {args.out}")
+    shard_note = "" if args.shards is None else f" ({args.shards} shards)"
+    print(f"[planner] {verb} {table.summary()} in {time.time() - t0:.2f}s"
+          f"{shard_note} → {args.out}")
+    if args.probe:
+        n = probe_plan_table(
+            table, resolve_config(args.arch, smoke=not args.full), k=args.probe
+        )
+        print(f"[planner]   probe: {n} cells re-validated — clean")
     for b, (batch, seq) in enumerate(table.buckets()):
         plan = table.plan_at(b, table.q_index(None))
         print(f"[planner]   {plan.summary()}")

@@ -1,12 +1,20 @@
-"""Test bootstrap: import paths + marker registration.
+"""Test bootstrap: import paths, marker registration, shared fixtures.
 
 Makes ``repro`` importable without an install (the repo is src-layout and has
 no setup.py) and the sibling test helpers importable regardless of how pytest
 was invoked.
+
+The plan-table fixtures below are the single source of the smoke-config
+table-build helpers shared by tests/test_plan_table.py,
+tests/test_serve_plan.py, and tests/test_dse_shard.py (they used to be
+duplicated per module). All repro imports stay inside the fixture bodies so
+collection never pays the jax import.
 """
 
 import os
 import sys
+
+import pytest
 
 _TESTS = os.path.dirname(os.path.abspath(__file__))
 _SRC = os.path.join(os.path.dirname(_TESTS), "src")
@@ -21,3 +29,68 @@ def pytest_configure(config):
         "slow: long-running model-zoo smoke / kernel sweeps "
         "(deselect with -m 'not slow' for the fast tier-1 job)",
     )
+
+
+# -- shared plan-table fixtures ------------------------------------------------
+
+# The canonical smoke bucket set for plan-table suites (two seq buckets at
+# batch 2 plus one at batch 4 — exercises both bucket axes).
+PLAN_BUCKETS = [(2, 16), (2, 32), (4, 32)]
+
+# Serving-regression shapes (test_serve_plan.py + the DSE serving check).
+SERVE_ARCHS = ["qwen3-4b", "xlstm-1.3b"]  # dense GQA + SSM
+SERVE_BATCH, SERVE_PROMPT, SERVE_GEN = 2, 8, 6
+SERVE_MAX_SEQ = SERVE_PROMPT + SERVE_GEN
+
+
+@pytest.fixture(scope="session")
+def plan_grid():
+    """Factory: cfg → (cost model, small Q grid spanning infeasible →
+    whole-app across PLAN_BUCKETS)."""
+    import numpy as np
+
+    from repro.core import lower_config, q_min, whole_app_partition
+    from repro.core.plan_table import _default_cost
+
+    def _grid(cfg, kind="time"):
+        cm = _default_cost(kind)
+        graphs = [lower_config(cfg, b, s, kind=kind) for (b, s) in PLAN_BUCKETS]
+        qmn = min(q_min(g, cm) for g in graphs)
+        hi = max(whole_app_partition(g, cm).e_total for g in graphs)
+        qs = [qmn * 0.5] + list(np.geomspace(qmn, hi * 1.1, 4)) + [None]
+        return cm, qs
+
+    return _grid
+
+
+@pytest.fixture(scope="session")
+def smoke_plan_table(plan_grid):
+    """Factory: smoke arch (or ModelConfig) → (cfg, cm, qs, table) built on
+    PLAN_BUCKETS. ``builder`` swaps in shard_plan_table etc.; extra kwargs
+    (n_shards, cache_dir, ...) forward to the builder."""
+    def _build(arch, kind="time", *, builder=None, buckets=None, **kwargs):
+        from repro.configs import SMOKE_CONFIGS
+        from repro.core import build_plan_table
+
+        cfg = SMOKE_CONFIGS[arch] if isinstance(arch, str) else arch
+        cm, qs = plan_grid(cfg, kind)
+        build = builder if builder is not None else build_plan_table
+        table = build(cfg, buckets or PLAN_BUCKETS, qs, kind=kind, cost=cm,
+                      **kwargs)
+        return cfg, cm, qs, table
+
+    return _build
+
+
+@pytest.fixture(scope="session")
+def serve_tables():
+    """One derived-grid plan table per serving regression arch."""
+    from repro.launch.planner import build_table_for_arch
+
+    return {
+        arch: build_table_for_arch(
+            arch, [(SERVE_BATCH, SERVE_MAX_SEQ), (SERVE_BATCH, 2 * SERVE_MAX_SEQ)],
+            n_q=8,
+        )
+        for arch in SERVE_ARCHS
+    }

@@ -9,10 +9,16 @@
   direct solve produces (no re-solve on the consuming side);
 * request-cycle grouping (the online half of energy-bounded serving) respects
   the shared budget tolerance.
+
+The smoke bucket set and Q-grid derivation live in conftest.py
+(``PLAN_BUCKETS`` / ``plan_grid`` / ``smoke_plan_table``), shared with
+tests/test_serve_plan.py and the sharded-DSE tier in tests/test_dse_shard.py.
 """
 
 import numpy as np
 import pytest
+
+from conftest import PLAN_BUCKETS
 
 from repro.configs import SMOKE_CONFIGS
 from repro.core import (
@@ -25,35 +31,20 @@ from repro.core import (
     config_fingerprint,
     lower_config,
     optimal_partition_jax,
-    q_min,
     sweep_jax,
-    whole_app_partition,
 )
 from repro.core import plan_table as pt_mod
 from repro.core import partition_jax
 from repro.core.offload import plan_offload
-from repro.core.plan_table import _default_cost
 from repro.core.remat_policy import plan_remat
 from repro.launch.planner import ServePlanner, as_planner, request_cycles
 
-BUCKETS = [(2, 16), (2, 32), (4, 32)]
-
-
-def _grid_for(cfg, kind="time"):
-    """Small Q grid spanning infeasible → whole-app across all buckets."""
-    cm = _default_cost(kind)
-    graphs = [lower_config(cfg, b, s, kind=kind) for (b, s) in BUCKETS]
-    qmn = min(q_min(g, cm) for g in graphs)
-    hi = max(whole_app_partition(g, cm).e_total for g in graphs)
-    qs = [qmn * 0.5] + list(np.geomspace(qmn, hi * 1.1, 4)) + [None]
-    return cm, qs
+BUCKETS = PLAN_BUCKETS
 
 
 @pytest.mark.parametrize("arch", sorted(SMOKE_CONFIGS))
-def test_lookup_bitidentical_to_direct_solve(arch):
-    cfg = SMOKE_CONFIGS[arch]
-    cm, qs = _grid_for(cfg)
-    table = build_plan_table(cfg, BUCKETS, qs, kind="time", cost=cm)
+def test_lookup_bitidentical_to_direct_solve(arch, smoke_plan_table):
+    cfg, cm, qs, table = smoke_plan_table(arch)
     for (b, s) in BUCKETS:
         g = lower_config(cfg, b, s, kind="time")
         direct = sweep_jax(g, cm, qs)
@@ -71,10 +62,8 @@ def test_lookup_bitidentical_to_direct_solve(arch):
         assert list(table.lookup(b, s, qs[-2]).bounds) == part.bounds
 
 
-def test_bucketing_rounds_seq_up():
-    cfg = SMOKE_CONFIGS["qwen3-4b"]
-    cm, qs = _grid_for(cfg)
-    table = build_plan_table(cfg, BUCKETS, qs, cost=cm)
+def test_bucketing_rounds_seq_up(smoke_plan_table):
+    _, _, qs, table = smoke_plan_table("qwen3-4b")
     # seq 20 rounds up to the (2, 32) bucket, not (2, 16)
     plan = table.lookup(2, 20, None)
     assert (plan.batch, plan.seq_bucket) == (2, 32)
@@ -88,14 +77,13 @@ def test_bucketing_rounds_seq_up():
         table.q_index(finite[0] * 1e-6)
 
 
-def test_roundtrip_save_load_exact(tmp_path):
-    cfg = SMOKE_CONFIGS["whisper-large-v3"]
-    cm, qs = _grid_for(cfg)
-    table = build_plan_table(cfg, BUCKETS, qs, cost=cm)
+def test_roundtrip_save_load_exact(tmp_path, smoke_plan_table):
+    _, _, qs, table = smoke_plan_table("whisper-large-v3")
     path = str(tmp_path / "plan.npz")
     table.save(path)
     loaded = PlanTable.load(path)
     assert loaded.header == table.header
+    assert loaded.content_digest() == table.content_digest()
     np.testing.assert_array_equal(loaded.q_grid, table.q_grid)
     np.testing.assert_array_equal(loaded.e_total, table.e_total)
     np.testing.assert_array_equal(loaded.cycle_energy, table.cycle_energy)
@@ -111,10 +99,9 @@ def test_roundtrip_save_load_exact(tmp_path):
             assert a == z  # frozen dataclass: full bit-exact equality
 
 
-def test_stale_version_and_unknown_bucket(tmp_path, monkeypatch):
-    cfg = SMOKE_CONFIGS["xlstm-1.3b"]
-    cm, qs = _grid_for(cfg)
-    table = build_plan_table(cfg, BUCKETS, qs, cost=cm)
+def test_stale_version_and_unknown_bucket(tmp_path, monkeypatch,
+                                          smoke_plan_table):
+    _, _, _, table = smoke_plan_table("xlstm-1.3b")
     path = str(tmp_path / "plan.npz")
     table.save(path)
 
@@ -129,9 +116,9 @@ def test_stale_version_and_unknown_bucket(tmp_path, monkeypatch):
         PlanTable.load(path)
 
 
-def test_build_cache_short_circuits_solve(tmp_path):
+def test_build_cache_short_circuits_solve(tmp_path, plan_grid):
     cfg = SMOKE_CONFIGS["tinyllama-1.1b"]
-    cm, qs = _grid_for(cfg)
+    cm, qs = plan_grid(cfg)
     cache = str(tmp_path)
     built0 = dict(pt_mod.BUILD_STATS)
     t1 = build_plan_table(cfg, BUCKETS, qs, cost=cm, cache_dir=cache)
@@ -146,6 +133,8 @@ def test_build_cache_short_circuits_solve(tmp_path):
     fp = config_fingerprint(cfg, BUCKETS, qs, "time", cm)
     fp2 = config_fingerprint(cfg, BUCKETS, qs[:-1], "time", cm)
     assert fp != fp2
+    # ... but the fingerprint is canonical: call order does not matter
+    assert fp == config_fingerprint(cfg, BUCKETS[::-1], qs[::-1], "time", cm)
 
 
 def test_builder_rejects_malformed_inputs():
@@ -156,15 +145,25 @@ def test_builder_rejects_malformed_inputs():
         build_plan_table(cfg, [(2, 16)], [])
     with pytest.raises(PlanTableError):
         build_plan_table(cfg, [(2, 16), (2, 16)], [None])
+    with pytest.raises(PlanTableError):
+        build_plan_table(cfg, [(2, 16)], [1e-3, 1e-3, None])
 
 
-def test_tabulated_cuts_drive_offload_and_remat():
+def test_canonical_ordering_is_call_order_invariant(plan_grid):
+    """Permuted buckets/Q values build content-identical tables."""
+    cfg = SMOKE_CONFIGS["qwen3-4b"]
+    cm, qs = plan_grid(cfg)
+    a = build_plan_table(cfg, BUCKETS, qs, cost=cm)
+    b = build_plan_table(cfg, BUCKETS[::-1], qs[::-1], cost=cm)
+    assert a.content_digest() == b.content_digest()
+    assert a.buckets() == sorted(BUCKETS)
+    assert list(a.q_grid) == sorted(a.q_grid)
+
+
+def test_tabulated_cuts_drive_offload_and_remat(smoke_plan_table):
     """A kind='memory' table's stored bounds, priced through the planner,
     reproduce the directly-solved OffloadPlan/RematPlan at on-grid budgets."""
-    arch = "zamba2-7b"
-    cfg = SMOKE_CONFIGS[arch]
-    cm, qs = _grid_for(cfg, kind="memory")
-    table = build_plan_table(cfg, BUCKETS, qs, kind="memory", cost=cm)
+    cfg, _, qs, table = smoke_plan_table("zamba2-7b", kind="memory")
     planner = ServePlanner(table)
     b, s = BUCKETS[1]
     budget = sorted(q for q in qs if q is not None)[-1]  # on-grid, feasible
@@ -183,16 +182,13 @@ def test_tabulated_cuts_drive_offload_and_remat():
     assert cuts == tuple(j for (_, j) in rem.bounds[:-1])
 
     # a time-kind table refuses memory-model derivation
-    cm_t, qs_t = _grid_for(cfg, kind="time")
-    t_time = build_plan_table(cfg, BUCKETS, qs_t, kind="time", cost=cm_t)
+    _, _, _, t_time = smoke_plan_table("zamba2-7b", kind="time")
     with pytest.raises(PlanTableError):
         ServePlanner(t_time).offload_plan(cfg, b, s, budget)
 
 
-def test_as_planner_coercions(tmp_path):
-    cfg = SMOKE_CONFIGS["qwen1.5-0.5b"]
-    cm, qs = _grid_for(cfg)
-    table = build_plan_table(cfg, BUCKETS, qs, cost=cm)
+def test_as_planner_coercions(tmp_path, smoke_plan_table):
+    cfg, _, _, table = smoke_plan_table("qwen1.5-0.5b")
     path = str(tmp_path / "t.npz")
     table.save(path)
     assert as_planner(path).table.arch == cfg.name

@@ -12,27 +12,33 @@
 import numpy as np
 import pytest
 
+from conftest import (
+    SERVE_ARCHS,
+    SERVE_BATCH,
+    SERVE_GEN,
+    SERVE_MAX_SEQ,
+    SERVE_PROMPT,
+)
+
 from repro.core import MemoryNVM, PowerFailure
 from repro.core import partition_jax
 from repro.core.plan_table import PlanTableError
 from repro.launch import serve as serve_mod
-from repro.launch.planner import ServePlanner, build_table_for_arch
+from repro.launch.planner import ServePlanner
 from repro.launch.serve import serve
 
 pytestmark = pytest.mark.slow  # XLA model compiles; fast job skips these
 
-ARCHS = ["qwen3-4b", "xlstm-1.3b"]  # dense GQA + SSM
-BATCH, PROMPT, GEN = 2, 8, 6
-MAX_SEQ = PROMPT + GEN
+# Shapes + the table-build fixture live in conftest.py (`serve_tables`),
+# shared with the sharded-DSE tier.
+ARCHS = SERVE_ARCHS
+BATCH, PROMPT, GEN = SERVE_BATCH, SERVE_PROMPT, SERVE_GEN
+MAX_SEQ = SERVE_MAX_SEQ
 
 
 @pytest.fixture(scope="module")
-def tables():
-    return {
-        arch: build_table_for_arch(arch, [(BATCH, MAX_SEQ), (BATCH, 2 * MAX_SEQ)],
-                                   n_q=8)
-        for arch in ARCHS
-    }
+def tables(serve_tables):
+    return serve_tables
 
 
 @pytest.fixture(scope="module")
