@@ -46,12 +46,25 @@ import numpy as np
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+from repro.api import PartitionSpec, solve  # noqa: E402
 from repro.core import (  # noqa: E402
-    PAPER_FRAM_MODEL, optimal_partition, q_min, single_task_partition, sweep,
-    whole_app_partition)
+    PAPER_FRAM_MODEL, q_min, single_task_partition, whole_app_partition)
 from repro.core.apps.headcount import THERMAL, VISUAL, build_graph  # noqa: E402
 
 CM = PAPER_FRAM_MODEL
+
+
+def _np_partition(g, cm, q_max):
+    """One numpy-backend partition through the façade (the old
+    ``optimal_partition`` call shape)."""
+    return solve(PartitionSpec(graph=g, cost=cm, q_max=q_max,
+                               backend="numpy")).partition()
+
+
+def _np_sweep(g, cm, qs):
+    """Numpy-backend Q-grid sweep through the façade (the old ``sweep``)."""
+    return solve(PartitionSpec(graph=g, cost=cm, q_grid=tuple(qs),
+                               backend="numpy")).partitions()
 
 
 def _row(name, value, derived=""):
@@ -72,7 +85,7 @@ def table12_energy_characterization():
 def fig6_partitioning_comparison():
     g = build_graph(THERMAL)
     t0 = time.time()
-    jl = optimal_partition(g, CM, 132e-3)
+    jl = _np_partition(g, CM, 132e-3)
     t_opt = (time.time() - t0) * 1e6
     st = single_task_partition(g, CM)
     wa = whole_app_partition(g, CM)
@@ -96,7 +109,7 @@ def fig7_fig8_design_space():
         g = build_graph(spec)
         qmn = q_min(g, CM)
         qs = np.geomspace(qmn, g.total_task_cost() * 1.05, 12)
-        parts = sweep(g, CM, qs)
+        parts = _np_sweep(g, CM, qs)
         for q, p in zip(qs, parts):
             if p is None:
                 continue
@@ -126,7 +139,7 @@ def optimizer_scaling():
             b.task(f"t{i}", reads=("x",), writes=(w,), cost=1e-4)
         g = b.build()
         t0 = time.time()
-        optimal_partition(g, CM, 0.05)
+        _np_partition(g, CM, 0.05)
         _row(f"scaling.partition_n={n}_us", f"{(time.time() - t0) * 1e6:.0f}",
              "column-sweep O(n^2); paper O(n^3 |P|)")
 
@@ -136,7 +149,6 @@ def partition_jax_engine():
     E_total + bounds per Q). Headcount Q-grid sweeps at two reductions, the
     optimizer-scaling ladder, and the whole zoo in one vmapped batch."""
     from repro.core import lower_zoo, q_min as qmin_np, tpu_host_offload_model
-    from repro.core.partition_jax import sweep_jax, sweep_jax_batched
 
     def best_of(f, n=3):
         ts = []
@@ -155,19 +167,20 @@ def partition_jax_engine():
         g = build_graph(THERMAL.reduced(scale))
         qmn = qmin_np(g, CM)
         qs = list(np.geomspace(qmn, g.total_task_cost() * 1.05, 4096))
-        sweep_jax(g, CM, qs)  # compile outside the timed region
-        t_jax = best_of(lambda: sweep_jax(g, CM, qs))
-        t_np = best_of(lambda: sweep(g, CM, qs))
+        spec = PartitionSpec(graph=g, cost=CM, q_grid=tuple(qs))
+        solve(spec)  # compile outside the timed region
+        t_jax = best_of(lambda: solve(spec).sweep)
+        t_np = best_of(lambda: _np_sweep(g, CM, qs))
         tag = f"partition_jax.headcount_n{g.n_tasks}"
         _row(f"{tag}.q4096_numpy_ms", f"{t_np * 1e3:.1f}",
-             "sweep(): dp + eager Partition objects")
+             "numpy backend: dp + eager Partition objects")
         _row(f"{tag}.q4096_jax_ms", f"{t_jax * 1e3:.1f}",
              "jitted: e_total + bounds arrays")
         _row(f"{tag}.q4096_speedup", f"{t_np / t_jax:.1f}",
              "acceptance: >=5x (n=33 row); see parity note")
         if scale == 192:
             t_jp = best_of(
-                lambda: sweep_jax(g, CM, qs).to_partitions(g, CM), n=2
+                lambda: solve(spec).partitions(), n=2
             )
             _row(f"{tag}.q4096_jax_full_parts_ms", f"{t_jp * 1e3:.1f}",
                  "jax engine + eager Partition objects (parity w/ numpy)")
@@ -178,12 +191,13 @@ def partition_jax_engine():
     names = sorted(zoo)
     qmns = {n: qmin_np(zoo[n], cm) for n in names}
     qs = list(np.geomspace(min(qmns.values()), max(qmns.values()) * 64, 512))
-    graphs = [zoo[n] for n in names]
-    sweep_jax_batched(graphs, cm, qs)  # compile
-    t = best_of(lambda: sweep_jax_batched(graphs, cm, qs), n=2)
+    spec = PartitionSpec(graphs=tuple(zoo[n] for n in names), cost=cm,
+                         q_grid=tuple(qs))
+    solve(spec)  # compile
+    t = best_of(lambda: solve(spec).sweeps, n=2)
     _row("partition_jax.zoo.batched_ms", f"{t * 1e3:.1f}",
          f"{len(names)} graphs x 512 Q, one vmap")
-    for n, res in zip(names, sweep_jax_batched(graphs, cm, qs)):
+    for n, res in zip(names, solve(spec).sweeps):
         feas = np.flatnonzero(res.feasible)
         lo = feas[0] if len(feas) else -1
         b = res.bounds(int(feas[-1])) if len(feas) else []
@@ -203,7 +217,6 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
     are also dumped to BENCH_partition_sweep.json for trend tracking.
     """
     from repro.core import dense_export_nbytes, q_min as qmin_np
-    from repro.core.partition_jax import sweep_jax
 
     records = {}
 
@@ -239,8 +252,9 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
     backends = ("scan", "pallas") if backend == "auto" else (backend,)
     times = {}
     for be in backends:
-        sweep_jax(g, CM, qs, backend=be)  # compile outside the timed region
-        times[be] = best_of(lambda be=be: sweep_jax(g, CM, qs, backend=be))
+        spec = PartitionSpec(graph=g, cost=CM, q_grid=tuple(qs), backend=be)
+        solve(spec)  # compile outside the timed region
+        times[be] = best_of(lambda spec=spec: solve(spec).sweep)
         row(f"partition_sweep.n{g.n_tasks}.q64_{be}_ms",
             f"{times[be] * 1e3:.1f}", "same outputs (bit-exact columns)")
     if len(times) == 2:
@@ -255,12 +269,11 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
             row("partition_sweep.full.skipped", 1,
                 "scan backend cannot materialize the full graph")
         else:
-            qs_full = [132e-3, None]
-            sweep_jax(g_full, CM, qs_full, backend="pallas")
-            t = best_of(
-                lambda: sweep_jax(g_full, CM, qs_full, backend="pallas"), n=2
-            )
-            res = sweep_jax(g_full, CM, qs_full, backend="pallas")
+            spec_full = PartitionSpec(graph=g_full, cost=CM,
+                                      q_grid=(132e-3, None), backend="pallas")
+            solve(spec_full)
+            t = best_of(lambda: solve(spec_full).sweep, n=2)
+            res = solve(spec_full).sweep
             row("partition_sweep.full.q2_pallas_s", f"{t:.2f}",
                 f"{g_full.n_tasks} tasks, one fused kernel")
             row("partition_sweep.full.bursts@132mJ",
@@ -269,10 +282,7 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
     path = json_out or os.path.join(
         os.path.dirname(__file__), "BENCH_partition_sweep.json"
     )
-    with open(path, "w") as f:
-        json.dump({"backend": backend, "smoke": bool(smoke),
-                   "rows": records}, f, indent=2)
-        f.write("\n")
+    _merge_bench_json(path, records, backend=backend, smoke=bool(smoke))
 
 
 def _merge_bench_json(path, new_rows, **meta):
@@ -304,7 +314,6 @@ def plan_table_bench(smoke=False, json_out=None):
     serve.py would otherwise do per request). Results also land in
     BENCH_plan_table.json for trend tracking.
     """
-    from repro.core import optimal_partition_jax
     from repro.core.layer_profile import lower_config
     from repro.core.plan_table import _default_cost
     from repro.launch.planner import build_table_for_arch, resolve_config
@@ -339,12 +348,15 @@ def plan_table_bench(smoke=False, json_out=None):
         "bucketize + Q select + plan slice (request path)")
 
     # the per-request alternative: lower the shape and solve one Q
-    optimal_partition_jax(lower_config(cfg, 2, 24, kind="time"), cm, mid_q)
+    def _replan():
+        g = lower_config(cfg, 2, 24, kind="time")  # per-request lowering
+        return solve(PartitionSpec(graph=g, cost=cm, q_max=mid_q)).partition()
+
+    _replan()
     n_replans = 5
     t0 = time.time()
     for _ in range(n_replans):
-        g = lower_config(cfg, 2, 24, kind="time")  # per-request lowering
-        optimal_partition_jax(g, cm, mid_q)
+        _replan()
     replan_us = (time.time() - t0) / n_replans * 1e6
     row("plan_table.replan_us", f"{replan_us:.0f}",
         "lower_config + one-Q solve per request (the path lookups replace)")
@@ -373,10 +385,11 @@ def plan_table_sharded(smoke=False, json_out=None):
     """
     import jax
 
+    from repro.api import QGridSharding
     from repro.configs import get_config
     from repro.core import partition_jax as pj
     from repro.core.plan_table import (
-        _default_cost, build_plan_table, extend_plan_table, shard_plan_table)
+        _default_cost, build_plan_table, extend_plan_table)
     from repro.launch.mesh import shard_devices
     from repro.launch.planner import derive_q_grid, lower_buckets
 
@@ -410,9 +423,9 @@ def plan_table_sharded(smoke=False, json_out=None):
     row("plan_table_sharded.single_host_build_s", f"{t_single:.2f}",
         "one batched engine call + vectorized assembly")
     t0 = time.time()
-    sharded = shard_plan_table(cfg, buckets, qs, n_shards=shards,
-                               devices=shard_devices(shards), cost=cm,
-                               graphs=graphs)
+    sharded = build_plan_table(
+        cfg, buckets, qs, cost=cm, graphs=graphs,
+        sharding=QGridSharding(shards, shard_devices(shards)))
     t_shard = time.time() - t0
     row("plan_table_sharded.sharded_build_s", f"{t_shard:.2f}",
         f"{shards}-way Q-shard "
@@ -454,6 +467,95 @@ def plan_table_sharded(smoke=False, json_out=None):
         os.path.dirname(__file__), "BENCH_plan_table.json"
     )
     _merge_bench_json(path, records, sharded_smoke=bool(smoke))
+
+
+def api_facade(smoke=False, json_out=None):
+    """Façade dispatch overhead: ``solve(PartitionSpec)`` vs calling the
+    engine implementation directly.
+
+    The façade validates the spec, resolves the backend through the
+    registry's capability flags, and wraps the result — all host-side
+    bookkeeping. The acceptance row pins that this costs <1% on the smoke
+    config (the old direct ``sweep_jax_batched`` call shape), so routing
+    every consumer through the one API is free at solve granularity. Rows
+    merge into BENCH_partition_sweep.json.
+    """
+    from repro.core import lower_config, q_min as qmin_np
+    from repro.core.partition_jax import _sweep_jax_batched
+    from repro.core.plan_table import _default_cost
+    from repro.launch.planner import resolve_config
+
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    def median_of(f, n=25):
+        ts = []
+        for _ in range(n):
+            t0 = time.perf_counter()
+            f()
+            ts.append(time.perf_counter() - t0)
+        return float(np.median(ts))
+
+    cfg = resolve_config("qwen3-4b", smoke=True)
+    cm = _default_cost("time")
+    graphs = [lower_config(cfg, b, s, kind="time")
+              for (b, s) in ((2, 24), (2, 48))]
+    qmn = min(qmin_np(g, cm) for g in graphs)
+    n_q = 1024 if smoke else 8192
+    qs = list(np.geomspace(qmn, qmn * 64, n_q)) + [None]
+    spec = PartitionSpec(graphs=tuple(graphs), cost=cm, q_grid=tuple(qs),
+                         backend="scan")
+
+    _sweep_jax_batched(graphs, cm, qs, backend="scan")  # compile once
+    solve(spec)
+    t_direct = median_of(
+        lambda: _sweep_jax_batched(graphs, cm, qs, backend="scan")
+    )
+    t_facade = median_of(lambda: solve(spec))
+
+    # The two medians above sit inside the same multi-ms XLA-dispatch noise
+    # band, so the *added* cost is also measured in isolation: run the full
+    # façade shell (spec validation, registry resolution, capability checks,
+    # Solution wrap) against a stubbed-out solver and charge its whole
+    # median against the direct solve time. This is the number the <1%
+    # acceptance bound actually constrains.
+    import repro.core.partition_jax as _pj
+
+    canned = _sweep_jax_batched(graphs, cm, qs, backend="scan")
+    real_impl = _pj._sweep_jax_batched
+    _pj._sweep_jax_batched = lambda *a, **k: canned
+    try:
+        t_shell = median_of(lambda: solve(spec), n=200)
+    finally:
+        _pj._sweep_jax_batched = real_impl
+    overhead = 100.0 * t_shell / t_direct
+
+    row("api_facade.direct_ms", f"{t_direct * 1e3:.2f}",
+        "engine implementation called directly (old sweep_jax_batched path)")
+    row("api_facade.solve_ms", f"{t_facade * 1e3:.2f}",
+        "solve(PartitionSpec) end to end (same noise band as direct)")
+    row("api_facade.dispatch_us", f"{t_shell * 1e6:.1f}",
+        "façade shell alone: validate + registry dispatch + wrap")
+    row("api_facade.overhead_pct", f"{overhead:.3f}",
+        "dispatch / direct solve; acceptance: <1% on the smoke config")
+    row("api_facade.grid", f"{len(graphs)}x{len(qs)}",
+        "smoke buckets x Q points, scan backend")
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_partition_sweep.json"
+    )
+    _merge_bench_json(path, records, facade_smoke=bool(smoke))
+    # This section *is* the acceptance gate (CI runs it as a named step):
+    # fail loudly instead of merely printing a row nobody asserts on.
+    if overhead >= 1.0:
+        raise SystemExit(
+            f"api_facade: dispatch overhead {overhead:.3f}% breaks the <1% "
+            f"acceptance bound ({t_shell * 1e6:.1f} µs shell vs "
+            f"{t_direct * 1e3:.2f} ms solve)"
+        )
 
 
 def julienne_planners():
@@ -532,6 +634,7 @@ SECTIONS = {
     "partition_sweep": partition_sweep,
     "plan_table": plan_table_bench,
     "plan_table_sharded": plan_table_sharded,
+    "api_facade": api_facade,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -557,7 +660,7 @@ def main(argv=None) -> None:
         fn = SECTIONS[name]
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
-        elif name in ("plan_table", "plan_table_sharded"):
+        elif name in ("plan_table", "plan_table_sharded", "api_facade"):
             fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()

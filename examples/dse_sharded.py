@@ -22,9 +22,10 @@ os.environ.setdefault("XLA_FLAGS", "--xla_force_host_platform_device_count=8")
 
 import jax  # noqa: E402
 
+from repro.api import QGridSharding  # noqa: E402
 from repro.configs import SMOKE_CONFIGS  # noqa: E402
 from repro.core import (  # noqa: E402
-    build_plan_table, extend_plan_table, probe_plan_table, shard_plan_table)
+    build_plan_table, extend_plan_table, probe_plan_table)
 from repro.core.plan_table import _default_cost  # noqa: E402
 from repro.launch.mesh import shard_devices  # noqa: E402
 from repro.launch.planner import derive_q_grid, lower_buckets  # noqa: E402
@@ -40,9 +41,9 @@ print(f"[example] {len(jax.local_devices())} devices, "
       f"{len(BUCKETS)} buckets x {len(qs)} Q points")
 
 single = build_plan_table(cfg, BUCKETS, qs, cost=cm, graphs=graphs)
-sharded = shard_plan_table(cfg, BUCKETS, qs, n_shards=SHARDS,
-                           devices=shard_devices(SHARDS), cost=cm,
-                           graphs=graphs)
+sharded = build_plan_table(
+    cfg, BUCKETS, qs, cost=cm, graphs=graphs,
+    sharding=QGridSharding(SHARDS, shard_devices(SHARDS)))
 print(f"[example] single-host build: {single.summary()}")
 print(f"[example] {SHARDS}-shard build byte-identical: "
       f"{sharded.content_digest() == single.content_digest()}")

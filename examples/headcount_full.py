@@ -15,9 +15,9 @@ import time
 
 import numpy as np
 
+from repro.api import PartitionSpec, solve
 from repro.core import dense_export_nbytes, q_min, whole_app_partition
 from repro.core.apps.headcount import THERMAL, VISUAL, build_graph, paper_cost_model
-from repro.core.partition_jax import _select_backend, sweep_jax
 
 cm = paper_cost_model()
 
@@ -27,21 +27,20 @@ for spec in (THERMAL, VISUAL):
     r = max(len(t.reads) for t in g.tasks)
     w = max(len(t.writes) for t in g.tasks)
     dense = dense_export_nbytes(g.n_tasks, r, w)
-    backend = _select_backend(g, "auto")
     print(f"=== {spec.name}: {g.n_tasks} tasks, "
           f"{csr.nnz_reads} read slots (max degree {r}) ===")
-    print(f"export: dense would be {dense / 1e6:.0f} MB, CSR is "
-          f"{csr.nbytes / 1e3:.0f} kB ({dense / csr.nbytes:.0f}x smaller) "
-          f"-> backend={backend}")
-
     e_app = g.total_task_cost()
     q_whole = whole_app_partition(g, cm).max_burst
     qmn = q_min(g, cm)
     qs = [qmn] + list(np.geomspace(qmn * 1.01, e_app * 1.05, 7)) + [None]
 
     t0 = time.time()
-    res = sweep_jax(g, cm, qs)  # auto -> CSR/Pallas sweep kernel
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_grid=tuple(qs)))
+    res = sol.sweep  # auto -> CSR/Pallas sweep kernel
     dt = time.time() - t0
+    print(f"export: dense would be {dense / 1e6:.0f} MB, CSR is "
+          f"{csr.nbytes / 1e3:.0f} kB ({dense / csr.nbytes:.0f}x smaller) "
+          f"-> backend={sol.backend}")
     print(f"solved {len(qs)} Q points in {dt:.1f}s (one fused kernel)")
     print(f"{'Q_max [mJ]':>12} {'bursts':>7} {'E_total [J]':>12} "
           f"{'overhead %':>11} {'storage reduction %':>20}")

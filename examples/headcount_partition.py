@@ -12,16 +12,18 @@ import random
 
 import numpy as np
 
+from repro.api import PartitionSpec, solve
 from repro.core import (
-    BurstRuntime, MemoryNVM, PowerFailure, execute_atomic, optimal_partition,
-    q_min, single_task_partition, sweep, whole_app_partition)
+    BurstRuntime, MemoryNVM, PowerFailure, execute_atomic,
+    q_min, single_task_partition, whole_app_partition)
 from repro.core.apps.headcount import THERMAL, VISUAL, build_graph, paper_cost_model
 
 cm = paper_cost_model()
 
 print("=== Fig. 6: thermal head-counting @ Q_max = 132 mJ ===")
 g = build_graph(THERMAL)
-jl = optimal_partition(g, cm, 132e-3)
+jl = solve(PartitionSpec(graph=g, cost=cm, q_max=132e-3,
+                         backend="numpy")).partition()
 st = single_task_partition(g, cm)
 wa = whole_app_partition(g, cm)
 print(f"Julienning:  {jl.n_bursts:5d} bursts  overhead "
@@ -38,7 +40,9 @@ for spec in (THERMAL, VISUAL):
     qmn = q_min(gg, cm)
     qs = np.geomspace(qmn, gg.total_task_cost() * 1.05, 8)
     print(f"{spec.name}: Q_min = {qmn * 1e3:.2f} mJ")
-    for q, p in zip(qs, sweep(gg, cm, qs)):
+    parts = solve(PartitionSpec(graph=gg, cost=cm, q_grid=tuple(qs),
+                                backend="numpy")).partitions()
+    for q, p in zip(qs, parts):
         if p:
             print(f"  Q={q * 1e3:8.1f} mJ → {p.n_bursts:4d} bursts, "
                   f"overhead {100 * p.e_overhead / p.e_total:6.3f}%")
@@ -47,7 +51,8 @@ print("\n=== Burst execution of the (reduced) CNN with power failures ===")
 spec = THERMAL.reduced(scale=64)
 g = build_graph(spec, with_fns=True, seed=3)
 ref = execute_atomic(g, {})
-part = optimal_partition(g, cm, 132e-3)
+part = solve(PartitionSpec(graph=g, cost=cm, q_max=132e-3,
+                           backend="numpy")).partition()
 rng = random.Random(0)
 rt = BurstRuntime(g, part, MemoryNVM(), cost=cm,
                   crash_hook=lambda b, ph: (_ for _ in ()).throw(PowerFailure())

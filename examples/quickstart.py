@@ -9,9 +9,10 @@ Run:  PYTHONPATH=src python examples/quickstart.py
 
 import numpy as np
 
+from repro.api import PartitionSpec, solve
 from repro.core import (
     BurstRuntime, GraphBuilder, MemoryNVM, PAPER_FRAM_MODEL, PowerFailure,
-    execute_atomic, optimal_partition, q_min)
+    execute_atomic, q_min)
 
 # 1. Declare the application: kernels with explicit data dependencies
 #    (paper Listing 1, with a runnable body for each kernel).
@@ -27,10 +28,11 @@ b.task("transmit", reads=("headCount",), cost=0.086e-3,
        fn=lambda inp: {})
 graph = b.build()
 
-# 2. Partition under an energy-storage bound
+# 2. Partition under an energy-storage bound — one declarative spec through
+#    the façade (objective/backends/sharding are all just spec fields)
 cm = PAPER_FRAM_MODEL
 print(f"Q_min (smallest feasible storage): {q_min(graph, cm) * 1e3:.1f} mJ")
-part = optimal_partition(graph, cm, q_max=2.2)
+part = solve(PartitionSpec(graph=graph, cost=cm, q_max=2.2)).partition()
 print("partition:", part.bounds)
 print(part.summary())
 

@@ -20,13 +20,13 @@ import time
 
 import numpy as np
 
+from repro.api import PartitionSpec, solve
 from repro.core import (
     lower_zoo,
     memory_cost_model,
     q_min,
     tpu_host_offload_model,
 )
-from repro.core.partition_jax import sweep_jax_batched
 
 B, S, NQ = 8, 4096, 256
 
@@ -37,10 +37,11 @@ names = sorted(zoo)
 qmns = {n: q_min(zoo[n], cm) for n in names}
 qs = list(np.geomspace(min(qmns.values()), max(qmns.values()) * 64, NQ))
 
-graphs = [zoo[n] for n in names]
-sweep_jax_batched(graphs, cm, qs)  # compile once
+spec = PartitionSpec(graphs=tuple(zoo[n] for n in names), cost=cm,
+                     q_grid=tuple(qs))
+solve(spec)  # compile once
 t0 = time.time()
-results = sweep_jax_batched(graphs, cm, qs)
+results = solve(spec).sweeps
 dt = time.time() - t0
 print(f"{len(names)} graphs x {NQ} Q points in one vmapped call: "
       f"{dt * 1e3:.1f} ms ({len(names) * NQ / dt:.0f} designs/s)\n")
@@ -68,6 +69,6 @@ names_m = sorted(zoo_m)
 for name in names_m:
     g = zoo_m[name]
     qmn = q_min(g, cm_m)
-    res = sweep_jax_batched([g], cm_m, [qmn, qmn * 4])[0]
+    res = solve(PartitionSpec(graph=g, cost=cm_m, q_grid=(qmn, qmn * 4))).sweep
     print(f"{name:<24} min activation budget {qmn / 1e3:8.1f} kB  "
           f"segments: {len(res.bounds(0))} @Qmin, {len(res.bounds(1))} @4x")

@@ -1,0 +1,96 @@
+"""The public Julienning API: declarative specs in, solutions out.
+
+Everything the repo can solve — the paper's energy-bounded partition DP, the
+§4.4 storage minimax, the exact-K pipeline DP, single graphs, zoo batches,
+Q-grid device sharding, numpy/scan/Pallas backends — goes through one call::
+
+    from repro.api import PartitionSpec, solve
+
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_max=132e-3))
+    part = sol.partition()                 # a repro.core.Partition
+
+    # the whole design space, batched and sharded
+    sol = solve(PartitionSpec(
+        config="qwen3-4b", shapes=((2, 24), (2, 48)), smoke=True,
+        q_grid=(1e-3, 5e-3, None), sharding=QGridSharding(n_shards=8),
+    ))
+    sol.sweeps[0].e_total                  # per-Q optima, first bucket
+
+    # §4.4 / pipeline objectives are just another axis of the spec
+    solve(PartitionSpec(graph=g, cost=cm, objective="minimax")).q_min()
+    solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
+                        n_bursts=4, k_objective="max")).partition()
+
+Results reproduce the legacy entry points (``optimal_partition``,
+``sweep_jax_batched``, …) **bit-identically** — the façade routes to the same
+private implementations; see tests/test_api.py for the per-function
+differential pins and the README "Public API" section for the migration
+table. The legacy functions still work but emit :class:`DeprecationWarning`.
+
+Backends self-register with capability flags; third-party code can add one::
+
+    from repro.api import register_backend
+
+    @register_backend("mine", objectives=("sum",), supports_dense=True)
+    class MyBackend:
+        def solve(self, req): ...
+
+and address it with ``PartitionSpec(backend="mine")``.
+"""
+
+from __future__ import annotations
+
+from .core._deprecation import JulienningDeprecationWarning
+from .core.engine import (
+    OBJECTIVES,
+    BackendInfo,
+    Engine,
+    EngineError,
+    ExportMismatch,
+    PartitionSpec,
+    QGridSharding,
+    Solution,
+    SpecError,
+    UnsupportedObjective,
+    backend_info,
+    backend_names,
+    default_engine,
+    export_kind,
+    register_backend,
+)
+from .core.partition import Infeasible
+
+__all__ = [
+    "OBJECTIVES",
+    "BackendInfo",
+    "Engine",
+    "EngineError",
+    "ExportMismatch",
+    "Infeasible",
+    "JulienningDeprecationWarning",
+    "PartitionSpec",
+    "QGridSharding",
+    "Solution",
+    "SpecError",
+    "UnsupportedObjective",
+    "backend_info",
+    "backend_names",
+    "default_engine",
+    "export_kind",
+    "register_backend",
+    "solve",
+]
+
+
+def solve(spec: PartitionSpec = None, **kwargs) -> Solution:
+    """Solve a :class:`PartitionSpec` on the default engine.
+
+    Accepts a prebuilt spec (positionally or as ``spec=``) or the spec's
+    keyword arguments directly (``solve(graph=g, cost=cm, q_max=0.1)`` ≡
+    ``solve(PartitionSpec(graph=g, cost=cm, q_max=0.1))``).
+    """
+    if spec is None:
+        spec = PartitionSpec(**kwargs)
+    elif kwargs:
+        raise SpecError("pass a PartitionSpec or keywords, not both")
+    return default_engine().solve(spec)

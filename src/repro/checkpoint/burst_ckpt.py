@@ -25,7 +25,8 @@ from typing import Any, Dict, Optional, Tuple
 import jax
 import numpy as np
 
-from ..core import CostModel, GraphBuilder, LinearTransfer, Partition, optimal_partition
+from ..api import PartitionSpec, solve
+from ..core import CostModel, GraphBuilder, LinearTransfer, Partition
 
 __all__ = ["BurstCheckpointer", "plan_burst_schedule"]
 
@@ -111,4 +112,6 @@ def plan_burst_schedule(
         write=LinearTransfer(c0=1.0, c1=1.0 / disk_bw),
         name="ckpt-disk",
     )
-    return optimal_partition(graph, cm, max_loss_seconds)
+    return solve(PartitionSpec(
+        graph=graph, cost=cm, q_max=max_loss_seconds, backend="numpy",
+    )).partition()

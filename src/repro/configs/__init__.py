@@ -16,6 +16,30 @@ from .base import REGISTRY, SHAPES, ModelConfig, ShapeConfig, get_config, shape_
 
 ALL_ARCHS = sorted(REGISTRY)
 
+
+def resolve_config(cfg, smoke: bool = False) -> ModelConfig:
+    """The one (config-or-arch-name, smoke) → :class:`ModelConfig` mapping.
+
+    Accepts a ready :class:`ModelConfig` (passed through untouched) or a
+    registry arch name, resolved against the smoke registry when ``smoke``
+    — shared by the façade (:mod:`repro.core.engine`), the plan-table
+    builders, and the launch CLIs, which used to each carry their own copy.
+    """
+    if isinstance(cfg, ModelConfig):
+        return cfg
+    if not isinstance(cfg, str):
+        raise TypeError(
+            f"expected a ModelConfig or arch name, got {type(cfg).__name__}"
+        )
+    if smoke:
+        try:
+            return SMOKE_CONFIGS[cfg]
+        except KeyError:
+            raise KeyError(
+                f"unknown smoke arch {cfg!r}; known: {sorted(SMOKE_CONFIGS)}"
+            ) from None
+    return get_config(cfg)
+
 SMOKE_CONFIGS = {
     "xlstm-1.3b": xlstm_1_3b.SMOKE,
     "qwen1.5-0.5b": qwen1_5_0_5b.SMOKE,

@@ -19,6 +19,19 @@ from .cost import (
     tpu_pipeline_model,
     tpu_remat_model,
 )
+from .engine import (
+    Engine,
+    EngineError,
+    ExportMismatch,
+    PartitionSpec,
+    QGridSharding,
+    Solution,
+    SpecError,
+    UnsupportedObjective,
+    backend_names,
+    default_engine,
+    register_backend,
+)
 from .graph import (
     GraphArrays,
     GraphBuilder,
@@ -32,6 +45,7 @@ from .graph import (
 )
 from .layer_profile import (
     build_activation_graph,
+    default_cost_model,
     external_inputs,
     lower_config,
     lower_zoo,

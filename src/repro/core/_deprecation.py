@@ -1,0 +1,47 @@
+"""Shared deprecation shim for the legacy solver entry points.
+
+The pre-façade codebase grew ~10 solver entry points with divergent
+signatures (``optimal_partition``, ``sweep_jax_batched``, ``shard_plan_table``,
+…). They all survive as thin shims over the same private implementations the
+:mod:`repro.api` façade dispatches to — bit-identical results, one
+:class:`DeprecationWarning` per call — so the historical differential and
+byte-identity suites keep pinning behavior while new code routes through
+``Engine.solve(PartitionSpec(...))``.
+
+The CI deprecation gate runs the non-shim test tier with
+``-W error::DeprecationWarning``; any internal module that regresses to a
+legacy entry point fails that step loudly.
+"""
+
+from __future__ import annotations
+
+import warnings
+
+__all__ = ["JulienningDeprecationWarning", "warn_legacy"]
+
+
+class JulienningDeprecationWarning(DeprecationWarning):
+    """Category of every legacy-entry-point warning this repo emits.
+
+    A plain :class:`DeprecationWarning` subclass, so the ISSUE-specified CI
+    gate (``-W error::DeprecationWarning``) catches it — but narrowly
+    filterable (``-W error::repro.core._deprecation.JulienningDeprecationWarning``
+    or ``ignore::``-same) when third-party libraries start deprecating
+    things of their own.
+    """
+
+
+def warn_legacy(name: str, replacement: str, *, stacklevel: int = 3) -> None:
+    """Emit the standard legacy-entry-point warning.
+
+    ``name`` is the dotted public name being called; ``replacement`` is the
+    façade spelling (a ``PartitionSpec`` sketch or the new keyword), shown so
+    callers can migrate without opening the docs.
+    """
+    warnings.warn(
+        f"{name} is a legacy Julienning entry point; build a PartitionSpec "
+        f"and route through repro.api instead — {replacement} "
+        f"(see the README 'Public API' migration table).",
+        JulienningDeprecationWarning,
+        stacklevel=stacklevel,
+    )

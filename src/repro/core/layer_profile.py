@@ -33,8 +33,8 @@ from .cost import PEAK_FLOPS, CostModel, LinearTransfer
 from .graph import GraphBuilder, TaskGraph
 
 __all__ = ["LayerProfile", "profile_model", "build_activation_graph",
-           "time_cost_model", "memory_cost_model", "lower_config",
-           "lower_zoo", "external_inputs"]
+           "time_cost_model", "memory_cost_model", "default_cost_model",
+           "lower_config", "lower_zoo", "external_inputs"]
 
 BYTES_ACT = 2  # bf16 activations
 
@@ -275,3 +275,17 @@ def memory_cost_model() -> CostModel:
         write=LinearTransfer(c0=0.0, c1=1.0),
         name="hbm-bytes",
     )
+
+
+def default_cost_model(kind: str) -> CostModel:
+    """The standard cost model per activation-graph ``kind`` — the single
+    default shared by the façade's config-lowered specs and the plan-table
+    builders (``"time"`` prices PCIe offload transfers, ``"memory"`` counts
+    working bytes)."""
+    if kind == "memory":
+        return memory_cost_model()
+    if kind == "time":
+        from .cost import tpu_host_offload_model
+
+        return tpu_host_offload_model()
+    raise ValueError(f"unknown graph kind {kind!r}; 'time' or 'memory'")

@@ -32,7 +32,8 @@ from .layer_profile import (
     memory_cost_model,
     profile_model,
 )
-from .partition import Infeasible, Partition, optimal_partition, q_min, within_budget
+from .engine import PartitionSpec, default_engine
+from .partition import Infeasible, Partition, q_min, within_budget
 
 __all__ = ["OffloadPlan", "plan_offload", "price_offload_bounds",
            "min_activation_budget"]
@@ -123,8 +124,10 @@ def plan_offload(cfg: ModelConfig, batch: int, seq: int,
                  hbm_budget_bytes: float) -> OffloadPlan:
     profiles, long_lived = profile_model(cfg, batch, seq)
     mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
-    part: Partition = optimal_partition(mem_graph, memory_cost_model(),
-                                        hbm_budget_bytes)
+    part: Partition = default_engine().solve(PartitionSpec(
+        graph=mem_graph, cost=memory_cost_model(), q_max=hbm_budget_bytes,
+        backend="numpy",
+    )).partition()
     return price_offload_bounds(
         cfg.name, profiles, mem_graph, part.bounds, hbm_budget_bytes
     )

@@ -28,6 +28,7 @@ from typing import List, Optional, Sequence, Tuple
 
 import numpy as np
 
+from ._deprecation import warn_legacy
 from .burst import BurstDetail, ColumnSweep, burst_cost, burst_detail
 from .cost import CostModel
 from .graph import TaskGraph
@@ -174,8 +175,17 @@ def _reconstruct(parent: np.ndarray, n: int) -> List[Tuple[int, int]]:
 def optimal_partition(
     graph: TaskGraph, cost: CostModel, q_max: Optional[float] = None
 ) -> Partition:
-    """Minimize E_total subject to every burst ≤ Q_max (None = unbounded)."""
-    return optimal_partition_multi(graph, cost, [q_max])[0]
+    """Minimize E_total subject to every burst ≤ Q_max (None = unbounded).
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       q_max=q, backend="numpy")).partition()`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition.optimal_partition",
+        "solve(PartitionSpec(graph=g, cost=cm, q_max=q, "
+        "backend='numpy')).partition()",
+    )
+    return _optimal_multi(graph, cost, [q_max])[0]
 
 
 def optimal_partition_multi(
@@ -185,6 +195,30 @@ def optimal_partition_multi(
 
     Returns ``None`` for infeasible Q values instead of raising when more than
     one Q is requested; raises :class:`Infeasible` for a single infeasible Q.
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       q_grid=qs, backend="numpy")).partitions()`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition.optimal_partition_multi",
+        "solve(PartitionSpec(graph=g, cost=cm, q_grid=qs, "
+        "backend='numpy')).partitions()",
+    )
+    return _optimal_multi(graph, cost, q_values)
+
+
+def _optimal_multi(
+    graph: TaskGraph,
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    raise_single: bool = True,
+) -> List[Optional[Partition]]:
+    """Implementation behind ``optimal_partition*`` / ``sweep`` and the
+    façade's numpy backend. ``raise_single`` keeps the historical contract
+    (a lone infeasible Q raises) for the legacy shims; the façade passes
+    False so infeasibility always comes back as ``None`` and surfaces as
+    :class:`Infeasible` uniformly at ``Solution.partition()`` time.
     """
     n = graph.n_tasks
     nq = len(q_values)
@@ -211,7 +245,7 @@ def optimal_partition_multi(
     out: List[Optional[Partition]] = []
     for qi, q in enumerate(q_values):
         if not np.isfinite(dp[qi, n]):
-            if nq == 1:
+            if nq == 1 and raise_single:
                 raise Infeasible(f"Q_max={q} < Q_min={q_min(graph, cost):.6g}")
             out.append(None)
             continue
@@ -233,7 +267,23 @@ def optimal_partition_k(
     ``objective="max"`` minimizes the largest burst (pipeline bottleneck —
     the §4.4 minimax criterion with a fixed stage count).
     DP over (bursts used, last task): O(K·n²).
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       objective="exact_k", n_bursts=k, k_objective=..., q_max=q,
+       backend="numpy")).partition()`` — bit-identical.
     """
+    warn_legacy(
+        "repro.core.partition.optimal_partition_k",
+        "solve(PartitionSpec(graph=g, cost=cm, objective='exact_k', "
+        "n_bursts=k, backend='numpy')).partition()",
+    )
+    return _optimal_k(graph, cost, n_bursts, q_max, objective)
+
+
+def _optimal_k(
+    graph: TaskGraph, cost: CostModel, n_bursts: int,
+    q_max: Optional[float] = None, objective: str = "sum",
+) -> Partition:
     n = graph.n_tasks
     if not 1 <= n_bursts <= max(n, 1):
         raise ValueError(f"n_bursts={n_bursts} out of range for {n} tasks")
@@ -390,8 +440,17 @@ def q_min_bruteforce(graph: TaskGraph, cost: CostModel) -> float:
 def sweep(
     graph: TaskGraph, cost: CostModel, q_values: Sequence[float]
 ) -> List[Optional[Partition]]:
-    """Optimal partitions across a Q_max range; None where infeasible."""
-    return optimal_partition_multi(graph, cost, list(q_values))
+    """Optimal partitions across a Q_max range; None where infeasible.
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       q_grid=qs, backend="numpy")).partitions()`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition.sweep",
+        "solve(PartitionSpec(graph=g, cost=cm, q_grid=qs, "
+        "backend='numpy')).partitions()",
+    )
+    return _optimal_multi(graph, cost, list(q_values))
 
 
 def single_task_partition(

@@ -1,5 +1,11 @@
 """JAX-native, jit-compiled burst partitioning engine (paper §4.3–§4.4).
 
+Reached through the :mod:`repro.api` façade: the ``scan`` and ``pallas``
+registry backends (:mod:`repro.core.engine`) dispatch into the private
+implementations here, and the historical public entry points (``sweep_jax``,
+``sweep_jax_batched``, ``sweep_jax_sharded``, ``optimal_partition_jax``)
+survive as thin :class:`DeprecationWarning` shims over the same code.
+
 This is the batched re-expression of the two numpy reference paths:
 
 * the incremental column sweep (:class:`repro.core.burst.ColumnSweep`)
@@ -71,12 +77,13 @@ from jax import lax
 from jax.experimental import enable_x64
 
 from ._cache import weak_id_cache
+from ._deprecation import warn_legacy
 from .cost import CostModel, cost_scalars
+from .engine import ExportMismatch, resolve_jit_backend
 from .graph import (
     GraphArrays,
     GraphCSRArrays,
     TaskGraph,
-    dense_export_nbytes,
     stack_graph_arrays,
 )
 from .partition import (
@@ -113,13 +120,19 @@ _AUTO_DENSE_BYTES = 32 << 20
 
 # Trace-count regression hooks (incremented at trace time only; see the
 # no-retrace test in tests/test_partition_sweep.py).
-TRACE_COUNT = {"dp_sweep": 0}
+TRACE_COUNT = {"dp_sweep": 0, "qmin_sweep": 0, "exactk_sweep": 0}
 
 # Host-side solve counters (incremented per engine entry, cached or not):
 # the plan-table serving tests pin "zero partitioner solves on the request
 # path" against these, and the DSE tests pin "extending an untouched table
 # never re-solves existing cells".
-SOLVE_COUNT = {"sweep_jax": 0, "sweep_jax_batched": 0, "sweep_jax_sharded": 0}
+SOLVE_COUNT = {
+    "sweep_jax": 0,
+    "sweep_jax_batched": 0,
+    "sweep_jax_sharded": 0,
+    "q_min_scan": 0,
+    "optimal_k_scan": 0,
+}
 
 
 # ---------------------------------------------------------------------------
@@ -127,20 +140,14 @@ SOLVE_COUNT = {"sweep_jax": 0, "sweep_jax_batched": 0, "sweep_jax_sharded": 0}
 # ---------------------------------------------------------------------------
 
 
-def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
-    """Column sweep + multi-Q DP + bounds reconstruction for one graph.
-
-    ``ga`` holds the GraphArrays fields as jnp arrays of static shape
-    (N,), (N,R), (N,W); ``n_tasks`` is a traced scalar (≤ N); ``qs`` is the
-    (nq,) Q_max grid. Returns (dp, parent, e_total, feasible, starts).
+def _sweep_inputs(ga: dict, cost_vec):
+    """Per-column scan inputs shared by every DP variant (sum / minimax /
+    exact-K): slot transfer costs under the cost model, the store term S(j),
+    and the stacked ``xs`` the scans consume. Returns ``(xs, e_s)``.
     """
-    TRACE_COUNT["dp_sweep"] += 1
     e_s, r_c0, r_c1, w_c0, w_c1 = (cost_vec[k] for k in range(5))
     N = ga["e_task"].shape[0]
-    R = ga["read_bytes"].shape[1]
     W = ga["write_bytes"].shape[1]
-    nq = qs.shape[0]
-    i_idx = jnp.arange(N + 1)
 
     # Per-slot transfer costs under this cost model (padding contributes 0).
     read_cost = ga["read_valid"] * (r_c0 * ga["read_c0w"] + r_c1 * ga["read_bytes"])
@@ -160,6 +167,72 @@ def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
         keep = ga["write_linf"][:, w] > j_col
         store_add = jnp.where(keep, store_add + write_cost[:, w], store_add)
 
+    xs = (
+        jnp.arange(1, N + 1),
+        ga["e_task"],
+        store_add,
+        read_cost,
+        read_free,
+        ga["read_lt"],
+        ga["read_writer"],
+        ga["read_linf"],
+    )
+    return xs, e_s
+
+
+def _advance_column(col, xs, i_idx, e_s, R):
+    """One task's updates to the live column E⟨·,j⟩ (identical op order to
+    the numpy :class:`~repro.core.burst.ColumnSweep`, so columns — and hence
+    every DP variant's tie-breaks — stay bit-compatible).
+
+    1) extend all existing bursts ⟨i, j-1⟩ with task j. For small R the
+    read-slot loop is unrolled at trace time and applies the adds in the
+    same order as the numpy sweep, keeping columns bit-identical (so argmin
+    tie-breaks — and hence bounds — match numpy exactly). Wide-reader graphs
+    (R > ``_UNROLL_MAX``, e.g. head-count's 5k-reader sort task) use one
+    masked 2-D reduction instead: same values to ~ulp (XLA's FMA contraction
+    already perturbs those graphs anyway). 2) start the new single-task
+    burst ⟨j,j⟩.
+    """
+    j, e_j, s_j, rcost, rfree, rlt, rwriter, rlinf = xs
+    prev = (i_idx >= 1) & (i_idx < j)
+    col = jnp.where(prev, col + (e_j + s_j), col)
+    if R <= _UNROLL_MAX:
+        sum_er = e_j * 0.0
+        for r in range(R):
+            col = jnp.where(prev & (i_idx > rlt[r]), col + rcost[r], col)
+            freed = (rlinf[r] == j) & (rwriter[r] >= 1)
+            col = jnp.where(
+                prev & freed & (i_idx <= rwriter[r]), col - rfree[r], col
+            )
+            sum_er = sum_er + rcost[r]
+    else:
+        loads = (rcost[None, :] * (i_idx[:, None] > rlt[None, :])).sum(1)
+        freed = (
+            rfree[None, :]
+            * ((rlinf == j) & (rwriter >= 1))[None, :]
+            * (i_idx[:, None] <= rwriter[None, :])
+        ).sum(1)
+        col = jnp.where(prev, col + loads - freed, col)
+        sum_er = rcost.sum()
+    col = col.at[j].set(e_s + sum_er + e_j + s_j)
+    return col
+
+
+def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
+    """Column sweep + multi-Q DP + bounds reconstruction for one graph.
+
+    ``ga`` holds the GraphArrays fields as jnp arrays of static shape
+    (N,), (N,R), (N,W); ``n_tasks`` is a traced scalar (≤ N); ``qs`` is the
+    (nq,) Q_max grid. Returns (dp, parent, e_total, feasible, starts).
+    """
+    TRACE_COUNT["dp_sweep"] += 1
+    N = ga["e_task"].shape[0]
+    R = ga["read_bytes"].shape[1]
+    nq = qs.shape[0]
+    i_idx = jnp.arange(N + 1)
+    xs, e_s = _sweep_inputs(ga, cost_vec)
+
     q_budget = qs * (1.0 + _REL) + _ABS
     i_tail = i_idx[1:]  # i = 1..N
     i_tail32 = i_tail.astype(jnp.int32)
@@ -169,41 +242,12 @@ def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
         tables are (nq, Wc) instead of (nq, N) — early chunks pay only for
         the bursts that can actually exist yet (~40% less DP work overall)."""
 
-        def step(carry, xs):
+        def step(carry, x):
             col, dp = carry
-            j, e_j, s_j, rcost, rfree, rlt, rwriter, rlinf = xs
-            prev = (i_idx >= 1) & (i_idx < j)
-            # 1) extend all existing bursts ⟨i, j-1⟩ with task j. For small R
-            # the read-slot loop is unrolled at trace time and applies the
-            # adds in the same order as the numpy sweep, keeping columns
-            # bit-identical (so argmin tie-breaks — and hence bounds — match
-            # numpy exactly). Wide-reader graphs (R > _UNROLL_MAX, e.g.
-            # head-count's 5k-reader sort task) use one masked 2-D reduction
-            # instead: same values to ~ulp (XLA's FMA contraction already
-            # perturbs those graphs anyway).
-            col = jnp.where(prev, col + (e_j + s_j), col)
-            if R <= _UNROLL_MAX:
-                sum_er = e_j * 0.0
-                for r in range(R):
-                    col = jnp.where(prev & (i_idx > rlt[r]), col + rcost[r], col)
-                    freed = (rlinf[r] == j) & (rwriter[r] >= 1)
-                    col = jnp.where(
-                        prev & freed & (i_idx <= rwriter[r]), col - rfree[r], col
-                    )
-                    sum_er = sum_er + rcost[r]
-            else:
-                loads = (rcost[None, :] * (i_idx[:, None] > rlt[None, :])).sum(1)
-                freed = (
-                    rfree[None, :]
-                    * ((rlinf == j) & (rwriter >= 1))[None, :]
-                    * (i_idx[:, None] <= rwriter[None, :])
-                ).sum(1)
-                col = jnp.where(prev, col + loads - freed, col)
-                sum_er = rcost.sum()
-            # 2) the new single-task burst ⟨j,j⟩
-            col = col.at[j].set(e_s + sum_er + e_j + s_j)
+            j = x[0]
+            col = _advance_column(col, x, i_idx, e_s, R)
 
-            # 3) DP relaxation dp[q, j] = min_i dp[q, i-1] + E⟨i,j⟩ over the
+            # DP relaxation dp[q, j] = min_i dp[q, i-1] + E⟨i,j⟩ over the
             # whole Q grid at once. No i ≤ j mask is needed: dp columns ≥ j
             # are still inf from initialization, so candidates beyond the
             # diagonal are inf automatically.
@@ -227,16 +271,6 @@ def _dp_sweep(ga: dict, n_tasks, cost_vec, qs):
 
         return step
 
-    xs = (
-        jnp.arange(1, N + 1),
-        ga["e_task"],
-        store_add,
-        read_cost,
-        read_free,
-        ga["read_lt"],
-        ga["read_writer"],
-        ga["read_linf"],
-    )
     dp0 = jnp.full((nq, N), jnp.inf).at[:, 0].set(0.0)
     carry = (jnp.zeros(N + 1), dp0)
     n_chunks = min(4, N)
@@ -277,6 +311,81 @@ _dp_sweep_vmap = jax.jit(
 )
 
 
+def _qmin_sweep(ga: dict, n_tasks, cost_vec):
+    """§4.4 storage minimization as the same column scan with a minimax
+    combine: mm[j] = min_i max(mm[i-1], E⟨i,j⟩). max/min are exact in
+    float64, so the result is bit-identical to the numpy :func:`q_min`
+    wherever the columns are (i.e. everywhere the sum DP is)."""
+    TRACE_COUNT["qmin_sweep"] += 1
+    N = ga["e_task"].shape[0]
+    R = ga["read_bytes"].shape[1]
+    i_idx = jnp.arange(N + 1)
+    xs, e_s = _sweep_inputs(ga, cost_vec)
+
+    def step(carry, x):
+        col, mm = carry
+        j = x[0]
+        col = _advance_column(col, x, i_idx, e_s, R)
+        # mm entries at positions ≥ j are still inf from initialization, so
+        # candidates beyond the diagonal drop out exactly like the sum DP's.
+        best = jnp.min(jnp.maximum(mm[:N], col[1 : N + 1]))
+        mm = mm.at[j].set(best)
+        return (col, mm), best
+
+    mm0 = jnp.full(N + 1, jnp.inf).at[0].set(0.0)
+    _, bests = lax.scan(step, (jnp.zeros(N + 1), mm0), xs)
+    return lax.dynamic_index_in_dim(bests, n_tasks - 1, keepdims=False)
+
+
+_qmin_sweep_jit = jax.jit(_qmin_sweep)
+
+
+def _exactk_sweep(ga: dict, n_tasks, cost_vec, q, *, n_bursts, combine_max):
+    """The exact-K pipeline DP riding the same column scan: dp[b, j] =
+    min_i combine(dp[b-1, i-1], E⟨i,j⟩) with b ≤ ``n_bursts`` (static, so
+    the b-loop unrolls at trace time) and the per-column budget mask applied
+    before the combine, exactly like :func:`repro.core.partition._optimal_k`.
+    Emits per-column (dp, parent) rows; the host walks the parents back so
+    bounds reconstruct bit-identically to the numpy oracle.
+    """
+    TRACE_COUNT["exactk_sweep"] += 1
+    del n_tasks  # the host indexes the emitted tables itself
+    N = ga["e_task"].shape[0]
+    R = ga["read_bytes"].shape[1]
+    K = n_bursts
+    i_idx = jnp.arange(N + 1)
+    i_tail32 = jnp.arange(1, N + 1, dtype=jnp.int32)
+    xs, e_s = _sweep_inputs(ga, cost_vec)
+    q_budget = q * (1.0 + _REL) + _ABS
+
+    def step(carry, x):
+        col, dp = carry  # dp: (K+1, N) over predecessor columns 0..N-1
+        j = x[0]
+        col = _advance_column(col, x, i_idx, e_s, R)
+        c = jnp.where(col[1 : N + 1] <= q_budget, col[1 : N + 1], jnp.inf)
+        # dp rows beyond the diagonal are inf, so stale column entries at
+        # i > j are masked exactly like the numpy 0:j slice.
+        vals, bests = [jnp.asarray(jnp.inf)], [jnp.int32(0)]
+        for b in range(1, K + 1):
+            cand = jnp.maximum(dp[b - 1], c) if combine_max else dp[b - 1] + c
+            mn = jnp.min(cand)
+            # numpy's first-minimum argmin (+1 = burst start), as in _dp_sweep
+            bests.append(jnp.min(jnp.where(cand == mn, i_tail32, N + 1)))
+            vals.append(mn)
+        val, bst = jnp.stack(vals), jnp.stack(bests)
+        dp = dp.at[:, j].set(val, mode="drop")
+        return (col, dp), (val, bst)
+
+    dp0 = jnp.full((K + 1, N), jnp.inf).at[0, 0].set(0.0)
+    _, (vals, bsts) = lax.scan(step, (jnp.zeros(N + 1), dp0), xs)
+    return vals, bsts  # (N, K+1) each: dp[b, j] = vals[j-1, b]
+
+
+_exactk_sweep_jit = jax.jit(
+    _exactk_sweep, static_argnames=("n_bursts", "combine_max")
+)
+
+
 # ---------------------------------------------------------------------------
 # Host-side wrappers
 # ---------------------------------------------------------------------------
@@ -304,7 +413,7 @@ class JaxSweep:
         if not self.feasible[qi]:
             return None
         s = np.flatnonzero(self.starts[qi, 1 : self.n_tasks + 1]) + 1
-        ends = list(s[1:] - 1) + [self.n_tasks]
+        ends = [int(e) for e in s[1:] - 1] + [self.n_tasks]
         return list(zip(s.tolist(), ends))
 
     def to_partitions(
@@ -327,8 +436,11 @@ AnyExport = Union[TaskGraph, GraphArrays, GraphCSRArrays]
 
 
 def _as_arrays(graph: AnyExport) -> GraphArrays:
+    """Coerce to the scan backend's dense export. Mixing layouts is a typed
+    :class:`repro.core.engine.ExportMismatch` (a TypeError subclass), the
+    same error the façade's registry capability check raises."""
     if isinstance(graph, GraphCSRArrays):
-        raise TypeError(
+        raise ExportMismatch(
             "the scan backend consumes dense GraphArrays; pass the TaskGraph "
             "or use backend='pallas' for a GraphCSRArrays export"
         )
@@ -336,8 +448,9 @@ def _as_arrays(graph: AnyExport) -> GraphArrays:
 
 
 def _as_csr(graph: AnyExport) -> GraphCSRArrays:
+    """Coerce to the Pallas backend's CSR export (see :func:`_as_arrays`)."""
     if isinstance(graph, GraphArrays):
-        raise TypeError(
+        raise ExportMismatch(
             "the pallas backend consumes GraphCSRArrays; pass the TaskGraph "
             "or use backend='scan' for a dense GraphArrays export"
         )
@@ -345,19 +458,12 @@ def _as_csr(graph: AnyExport) -> GraphCSRArrays:
 
 
 def _select_backend(graph: AnyExport, backend: str) -> str:
-    """Resolve ``backend="auto"`` per graph (see module docstring)."""
-    if backend in ("scan", "pallas"):
-        return backend
-    if backend != "auto":
-        raise ValueError(f"unknown backend {backend!r}")
-    if isinstance(graph, GraphCSRArrays):
-        return "pallas"
-    if isinstance(graph, GraphArrays):
-        return "scan"
-    n = graph.n_tasks
-    r = max((len(t.reads) for t in graph.tasks), default=0)
-    w = max((len(t.writes) for t in graph.tasks), default=0)
-    return "pallas" if dense_export_nbytes(n, r, w) > _AUTO_DENSE_BYTES else "scan"
+    """Resolve ``backend="auto"`` per graph — delegates to the façade's
+    backend registry (:func:`repro.core.engine.resolve_jit_backend`), which
+    replaced the hand-rolled if-chain that used to live here. The size
+    threshold stays in this module as ``_AUTO_DENSE_BYTES`` (read at call
+    time, so tests can monkeypatch it)."""
+    return resolve_jit_backend(graph, backend)
 
 
 # Serving-path upload caches (see core/_cache.py for the id+weakref idiom):
@@ -479,6 +585,28 @@ def sweep_jax(
 ) -> JaxSweep:
     """One jitted pass: optimal E_total + bounds for every Q_max in the grid.
 
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       q_grid=qs, backend=...)).sweep`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition_jax.sweep_jax",
+        "solve(PartitionSpec(graph=g, cost=cm, q_grid=qs)).sweep",
+    )
+    return _sweep_jax(graph, cost, q_values, backend=backend,
+                      interpret=interpret)
+
+
+def _sweep_jax(
+    graph: AnyExport,
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> JaxSweep:
+    """Implementation behind ``sweep_jax`` and the façade's single-graph sum
+    dispatch: optimal E_total + bounds for every Q_max in the grid.
+
     Drop-in analogue of :func:`repro.core.partition.sweep` /
     ``optimal_partition_multi`` — infeasible Q values come back with
     ``feasible == False`` instead of None. An empty graph is trivially
@@ -527,6 +655,28 @@ def sweep_jax_batched(
 ) -> List[JaxSweep]:
     """Solve many applications × many Q_max values with one compiled kernel.
 
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graphs=gs, cost=cm,
+       q_grid=qs, backend=...)).sweeps`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition_jax.sweep_jax_batched",
+        "solve(PartitionSpec(graphs=gs, cost=cm, q_grid=qs)).sweeps",
+    )
+    return _sweep_jax_batched(graphs, cost, q_values, backend=backend,
+                              interpret=interpret)
+
+
+def _sweep_jax_batched(
+    graphs: Sequence[AnyExport],
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> List[JaxSweep]:
+    """Implementation behind ``sweep_jax_batched`` and the façade's batched
+    sum dispatch.
+
     Scan backend: graphs pad to a common (N, R, W) via
     :func:`stack_graph_arrays` and solve in one ``vmap``. Pallas backend:
     graphs pad to a common (N, nnz_r, nnz_w) — the padded rows are cached
@@ -545,7 +695,7 @@ def sweep_jax_batched(
             out: List[Optional[JaxSweep]] = [None] * len(graphs)
             for be in ("scan", "pallas"):
                 idx = [k for k, r in enumerate(resolved) if r == be]
-                group = sweep_jax_batched(
+                group = _sweep_jax_batched(
                     [graphs[k] for k in idx], cost, q_values,
                     backend=be, interpret=interpret,
                 )
@@ -691,7 +841,34 @@ def sweep_jax_sharded(
     backend: str = "auto",
     interpret: Optional[bool] = None,
 ) -> List[JaxSweep]:
-    """Q-grid-sharded :func:`sweep_jax_batched`: same results, many devices.
+    """Q-grid-sharded batched sweep: same results, many devices.
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graphs=gs, cost=cm,
+       q_grid=qs, sharding=QGridSharding(n_shards, devices))).sweeps`` —
+       bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition_jax.sweep_jax_sharded",
+        "solve(PartitionSpec(graphs=gs, cost=cm, q_grid=qs, "
+        "sharding=QGridSharding(n_shards, devices))).sweeps",
+    )
+    return _sweep_jax_sharded(
+        graphs, cost, q_values, n_shards=n_shards, devices=devices,
+        backend=backend, interpret=interpret,
+    )
+
+
+def _sweep_jax_sharded(
+    graphs: Sequence[AnyExport],
+    cost: CostModel,
+    q_values: Sequence[Optional[float]],
+    *,
+    n_shards: int,
+    devices: Optional[Sequence] = None,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> List[JaxSweep]:
+    """Q-grid-sharded :func:`_sweep_jax_batched`: same results, many devices.
 
     The Q grid splits into ``n_shards`` contiguous chunks
     (:func:`shard_q_grid`); every device solves all graphs for one chunk and
@@ -717,7 +894,7 @@ def sweep_jax_sharded(
         # CSR/Pallas (or mixed) batch: host-sharded chunk loop.
         qs_list = list(q_values)
         chunk_sweeps = [
-            sweep_jax_batched(
+            _sweep_jax_batched(
                 graphs, cost, qs_list[lo:hi], backend=backend,
                 interpret=interpret,
             )
@@ -785,10 +962,104 @@ def optimal_partition_jax(
     *,
     backend: str = "auto",
 ) -> Partition:
-    """Single-Q convenience mirroring :func:`optimal_partition` (raises
-    :class:`Infeasible` when Q_max < Q_min)."""
-    res = sweep_jax(graph, cost, [q_max], backend=backend)
+    """Single-Q convenience mirroring the legacy ``optimal_partition``
+    (raises :class:`Infeasible` when Q_max < Q_min).
+
+    .. deprecated:: use ``repro.api.solve(PartitionSpec(graph=g, cost=cm,
+       q_max=q, backend=...)).partition()`` — bit-identical.
+    """
+    warn_legacy(
+        "repro.core.partition_jax.optimal_partition_jax",
+        "solve(PartitionSpec(graph=g, cost=cm, q_max=q)).partition()",
+    )
+    return _optimal_partition_jax(graph, cost, q_max, backend=backend)
+
+
+def _optimal_partition_jax(
+    graph: TaskGraph,
+    cost: CostModel,
+    q_max: Optional[float] = None,
+    *,
+    backend: str = "auto",
+) -> Partition:
+    res = _sweep_jax(graph, cost, [q_max], backend=backend)
     parts = res.to_partitions(graph, cost)
     if parts[0] is None:
         raise Infeasible(f"Q_max={q_max} admits no partition")
     return parts[0]
+
+
+# ---------------------------------------------------------------------------
+# Scan-backend minimax / exact-K — the façade's objective= axis
+# ---------------------------------------------------------------------------
+
+
+def _q_min_scan(graph: AnyExport, cost: CostModel) -> float:
+    """§4.4 storage minimization on the jitted scan engine — the façade's
+    ``objective="minimax"`` on ``backend="scan"``. Bit-identical to the
+    numpy :func:`repro.core.partition.q_min` on unroll-width graphs (the
+    minimax combine is exact; only the shared columns can differ, and only
+    for R > ``_UNROLL_MAX`` — same caveat as the sum DP)."""
+    SOLVE_COUNT["q_min_scan"] += 1
+    arrays = _as_arrays(graph)
+    if arrays.n_tasks == 0:
+        return 0.0
+    with enable_x64():
+        out = _qmin_sweep_jit(
+            _ga_dict(arrays),
+            jnp.asarray(arrays.n_tasks, dtype=jnp.int32),
+            _cost_vec(cost),
+        )
+        return float(np.asarray(out))
+
+
+def _optimal_k_scan(
+    graph: AnyExport,
+    cost: CostModel,
+    n_bursts: int,
+    q_max: Optional[float] = None,
+    objective: str = "sum",
+) -> Partition:
+    """Exact-K partition on the jitted scan engine — the façade's
+    ``objective="exact_k"`` on ``backend="scan"``. The emitted (dp, parent)
+    tables reconstruct on the host with the same walk as the numpy
+    :func:`repro.core.partition._optimal_k`, so bounds (and tie-breaks)
+    match it bit-for-bit on unroll-width graphs."""
+    SOLVE_COUNT["optimal_k_scan"] += 1
+    if not isinstance(graph, TaskGraph):
+        raise ExportMismatch(
+            "exact_k needs the TaskGraph to price the reconstructed bursts; "
+            "pass the graph rather than a pre-exported layout"
+        )
+    arrays = _as_arrays(graph)
+    n = arrays.n_tasks
+    if not 1 <= n_bursts <= max(n, 1):
+        raise ValueError(f"n_bursts={n_bursts} out of range for {n} tasks")
+    if n == 0:
+        return Partition([], [], q_max)
+    if objective not in ("sum", "max"):
+        raise ValueError(f"objective must be 'sum' or 'max', got {objective!r}")
+    q = np.inf if q_max is None else float(q_max)
+    with enable_x64():
+        vals, bsts = _exactk_sweep_jit(
+            _ga_dict(arrays),
+            jnp.asarray(n, dtype=jnp.int32),
+            _cost_vec(cost),
+            jnp.asarray(q, dtype=jnp.float64),
+            n_bursts=int(n_bursts),
+            combine_max=(objective == "max"),
+        )
+    vals = np.asarray(vals)  # (N, K+1): dp[b, j] = vals[j-1, b]
+    bsts = np.asarray(bsts)
+    if not np.isfinite(vals[n - 1, n_bursts]):
+        raise Infeasible(f"no {n_bursts}-burst partition within Q_max={q_max}")
+    bounds: List[Tuple[int, int]] = []
+    j, b = n, n_bursts
+    while j > 0:
+        i = int(bsts[j - 1, b])
+        bounds.append((i, j))
+        j, b = i - 1, b - 1
+    bounds.reverse()
+    part = _partition_from_bounds(graph, cost, bounds, q_max)
+    part.validate(graph)
+    return part

@@ -18,8 +18,9 @@ from typing import List, Tuple
 
 from ..configs.base import ModelConfig
 from .cost import tpu_pipeline_model
+from .engine import PartitionSpec, default_engine
 from .layer_profile import build_activation_graph, profile_model
-from .partition import Partition, optimal_partition_k
+from .partition import Partition
 
 __all__ = ["PipelinePlan", "plan_pipeline"]
 
@@ -53,8 +54,10 @@ def plan_pipeline(cfg: ModelConfig, batch: int, seq: int, n_stages: int,
     profiles, long_lived = profile_model(cfg, batch, seq)
     graph = build_activation_graph(profiles, long_lived, kind="time")
     cm = tpu_pipeline_model()
-    part: Partition = optimal_partition_k(graph, cm, n_stages,
-                                          objective=objective)
+    part: Partition = default_engine().solve(PartitionSpec(
+        graph=graph, cost=cm, objective="exact_k", n_bursts=n_stages,
+        k_objective=objective, backend="numpy",
+    )).partition()
     stage_w = [
         sum(p.weight_bytes for p in profiles[i - 1 : j]) for (i, j) in part.bounds
     ]

@@ -3,8 +3,8 @@
 The paper's core claim is that energy-bounded execution cycles are planned
 *ahead of time* and replayed cheaply at runtime (0.12% measured overhead).
 This module is that split for the TPU serving path: an **offline** builder
-solves the whole (shape-bucket × Q_max) design space in one batched engine
-call (:func:`repro.core.partition_jax.sweep_jax_batched`), and the **online**
+solves the whole (shape-bucket × Q_max) design space in one batched façade
+call (:func:`repro.api.solve` over a ``PartitionSpec``), and the **online**
 side (:mod:`repro.launch.planner` / :mod:`repro.launch.serve`) answers every
 request with an O(1) table lookup — no DP solve, no retrace, no re-upload on
 the request path.
@@ -27,11 +27,12 @@ model) can never silently serve another.
 
 Design-space exploration at scale (the sharded DSE subsystem):
 
-* :func:`shard_plan_table` partitions the Q grid across a device mesh
-  (:func:`repro.core.partition_jax.sweep_jax_sharded`, pmap over emulated or
-  real devices) and gathers per-shard columns into one table whose content is
-  **byte-identical** to the single-host :func:`build_plan_table` result
-  (compare with :meth:`PlanTable.content_digest`);
+* ``build_plan_table(..., sharding=QGridSharding(...))`` partitions the Q
+  grid across a device mesh (pmap over emulated or real devices) and gathers
+  per-shard columns into one table whose content is **byte-identical** to
+  the unsharded :func:`build_plan_table` result (compare with
+  :meth:`PlanTable.content_digest`; :func:`shard_plan_table` survives as a
+  deprecation shim);
 * :func:`extend_plan_table` appends new buckets / Q points to an existing
   table *without re-solving any existing cell* — copied cells are byte-moved,
   only the genuinely new (bucket, Q) cells hit the engine, and the header's
@@ -65,10 +66,11 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ._deprecation import warn_legacy
 from .burst import burst_cost
-from .cost import CostModel, cost_scalars, tpu_host_offload_model
+from .cost import CostModel, cost_scalars
 from .graph import TaskGraph
-from .layer_profile import lower_config, memory_cost_model
+from .layer_profile import default_cost_model, lower_config
 from .partition import BUDGET_ABS, BUDGET_REL, Infeasible
 
 __all__ = [
@@ -457,8 +459,10 @@ class PlanTable:
         )
 
 
-def _default_cost(kind: str) -> CostModel:
-    return memory_cost_model() if kind == "memory" else tpu_host_offload_model()
+# The per-kind default cost model now lives with the lowering
+# (layer_profile.default_cost_model); this alias keeps the historical name
+# importable for the CLIs and examples.
+_default_cost = default_cost_model
 
 
 # ---------------------------------------------------------------------------
@@ -653,17 +657,28 @@ def _cache_lookup(cache_dir: Optional[str], fp: str, lineage: Sequence[str]):
     return cache_path, None
 
 
-def _resolve_cfg(cfg: Union[ModelConfig, str]) -> ModelConfig:
-    if isinstance(cfg, str):
-        from ..configs import get_config
-
-        return get_config(cfg)
-    return cfg
-
-
 # ---------------------------------------------------------------------------
 # Builders
 # ---------------------------------------------------------------------------
+
+
+def _facade_sweeps(graphs, cm, qs, backend, sharding):
+    """One batched façade solve returning JaxSweeps — the cell assembly
+    consumes sweep tables, so a Partition-producing backend (numpy) is a
+    clear error here rather than a ``None`` downstream."""
+    from ..api import PartitionSpec, solve  # lazy: jax-heavy
+
+    sol = solve(PartitionSpec(
+        graphs=tuple(graphs), cost=cm, q_grid=tuple(qs),
+        backend=backend, sharding=sharding,
+    ))
+    if sol.sweeps is None:
+        raise PlanTableError(
+            f"plan tables need a JaxSweep-producing backend "
+            f"(scan/pallas/auto); backend={backend!r} returns Partition "
+            f"objects"
+        )
+    return sol.sweeps
 
 
 def _build_table(
@@ -676,12 +691,11 @@ def _build_table(
     backend: str,
     cache_dir: Optional[str],
     graphs: Optional[Sequence[TaskGraph]],
-    n_shards: Optional[int],
-    devices: Optional[Sequence],
+    sharding,
 ) -> PlanTable:
-    from .partition_jax import sweep_jax_batched, sweep_jax_sharded  # lazy
+    from ..configs import resolve_config
 
-    cfg = _resolve_cfg(cfg)
+    cfg = resolve_config(cfg)
     buckets, qs, graphs = _canonical_grid(shape_buckets, q_values, graphs)
     cm = cost if cost is not None else _default_cost(kind)
     fp = config_fingerprint(cfg, buckets, qs, kind, cm)
@@ -693,12 +707,7 @@ def _build_table(
 
     if graphs is None:
         graphs = [lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets]
-    if n_shards is None:
-        sweeps = sweep_jax_batched(graphs, cm, qs, backend=backend)
-    else:
-        sweeps = sweep_jax_sharded(
-            graphs, cm, qs, n_shards=n_shards, devices=devices, backend=backend
-        )
+    sweeps = _facade_sweeps(graphs, cm, qs, backend, sharding)
     table = _finish_table(
         cfg, kind, cm, fp, backend, buckets, qs,
         [g.n_tasks for g in graphs], _block_from_sweeps(graphs, cm, sweeps),
@@ -720,10 +729,11 @@ def build_plan_table(
     backend: str = "auto",
     cache_dir: Optional[str] = None,
     graphs: Optional[Sequence[TaskGraph]] = None,
+    sharding=None,
 ) -> PlanTable:
     """Offline build: lower every (batch, seq) bucket via
     :func:`lower_config` and solve the whole bucket × Q grid in one
-    batched engine call.
+    batched façade call (:func:`repro.api.solve`).
 
     ``kind`` picks the activation-graph cost interpretation ("time" seconds /
     "memory" working bytes — see :mod:`.layer_profile`); ``cost`` prices
@@ -736,10 +746,19 @@ def build_plan_table(
     derive the Q grid) skip the second lowering; identity is still pinned by
     the fingerprint over (cfg, buckets, kind). Buckets and Q values are
     stored in canonical sorted order regardless of call order.
+
+    ``sharding`` (a :class:`repro.api.QGridSharding`) splits the Q grid
+    across a device mesh; the gathered per-shard columns assemble into a
+    table **byte-identical** to the unsharded build of the same inputs
+    (same fingerprint, same :meth:`PlanTable.content_digest` — the
+    differential tier pins this on 1/2/4/8 emulated devices). With fewer
+    devices than shards the same chunk decomposition runs sequentially
+    (bit-identical either way), so a shard count tuned for an 8-device host
+    is safe on a laptop.
     """
     return _build_table(
         cfg, shape_buckets, q_values, kind=kind, cost=cost, backend=backend,
-        cache_dir=cache_dir, graphs=graphs, n_shards=None, devices=None,
+        cache_dir=cache_dir, graphs=graphs, sharding=sharding,
     )
 
 
@@ -756,22 +775,25 @@ def shard_plan_table(
     cache_dir: Optional[str] = None,
     graphs: Optional[Sequence[TaskGraph]] = None,
 ) -> PlanTable:
-    """Sharded offline build: the Q grid splits across ``n_shards`` devices
-    (:func:`repro.core.partition_jax.sweep_jax_sharded`) and the gathered
-    per-shard columns assemble into a table **byte-identical** to
-    :func:`build_plan_table` of the same inputs (same fingerprint, same
-    :meth:`PlanTable.content_digest` — the differential tier pins this on
-    1/2/4/8 emulated devices).
+    """Sharded offline build.
 
-    ``devices`` defaults to ``jax.local_devices()``; with fewer devices than
-    shards the same chunk decomposition runs sequentially (bit-identical
-    either way), so a shard count tuned for an 8-device host is safe to run
-    on a laptop. All other parameters match :func:`build_plan_table`.
+    .. deprecated:: use ``build_plan_table(...,
+       sharding=QGridSharding(n_shards, devices))`` — byte-identical output
+       (the two historical builders collapsed into one spec-shaped entry
+       point).
     """
+    warn_legacy(
+        "repro.core.plan_table.shard_plan_table",
+        "build_plan_table(..., sharding=QGridSharding(n_shards, devices))",
+    )
+    from ..api import QGridSharding  # lazy: avoids an import cycle
+
     return _build_table(
         cfg, shape_buckets, q_values, kind=kind, cost=cost, backend=backend,
-        cache_dir=cache_dir, graphs=graphs, n_shards=int(n_shards),
-        devices=devices,
+        cache_dir=cache_dir, graphs=graphs,
+        sharding=QGridSharding(
+            int(n_shards), None if devices is None else tuple(devices)
+        ),
     )
 
 
@@ -803,11 +825,12 @@ def extend_plan_table(
     (the property tier shuffles them). The header's ``lineage`` chain gains
     the final fingerprint, recording the extension provenance.
     """
-    from .partition_jax import sweep_jax_batched, sweep_jax_sharded  # lazy
+    from ..api import QGridSharding  # lazy: jax-heavy
+    from ..configs import resolve_config
 
     if isinstance(base, str):
         base = PlanTable.load(base)
-    cfg = _resolve_cfg(cfg)
+    cfg = resolve_config(cfg)
     kind = base.kind
     cm = cost if cost is not None else _default_cost(kind)
     base_buckets = base.buckets()
@@ -844,12 +867,14 @@ def extend_plan_table(
         BUILD_STATS["cache_hits"] += 1
         return cached
 
-    def solve(graphs, qs):
-        if n_shards is None:
-            return sweep_jax_batched(graphs, cm, qs, backend=backend)
-        return sweep_jax_sharded(
-            graphs, cm, qs, n_shards=n_shards, devices=devices, backend=backend
+    sharding = (
+        None if n_shards is None else QGridSharding(
+            int(n_shards), None if devices is None else tuple(devices)
         )
+    )
+
+    def _solve(graphs, qs):
+        return _facade_sweeps(graphs, cm, qs, backend, sharding)
 
     new_buckets = sorted(new_buckets)
     new_b_index = {b: i for i, b in enumerate(new_buckets)}
@@ -866,13 +891,13 @@ def extend_plan_table(
         new_graphs = [
             lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in new_buckets
         ]
-        blocks.append(_block_from_sweeps(new_graphs, cm, solve(new_graphs, final_qs)))
+        blocks.append(_block_from_sweeps(new_graphs, cm, _solve(new_graphs, final_qs)))
     off_oldq = off_newb + len(new_buckets) * nq_f
     if new_qs:
         old_graphs = [
             lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in base_buckets
         ]
-        blocks.append(_block_from_sweeps(old_graphs, cm, solve(old_graphs, new_qs)))
+        blocks.append(_block_from_sweeps(old_graphs, cm, _solve(old_graphs, new_qs)))
     pool = _block_concat(blocks)
 
     # Per-Q source row (same for every old bucket): base column or new-solve
@@ -933,9 +958,10 @@ def probe_plan_table(
     by even one bit from a fresh solve — the load-time guard for tables that
     outlived an engine or cost-model change the version field can't see.
     """
-    from .partition_jax import sweep_jax  # lazy: jax-heavy
+    from ..api import PartitionSpec, solve  # lazy: jax-heavy
+    from ..configs import resolve_config
 
-    cfg = _resolve_cfg(cfg)
+    cfg = resolve_config(cfg)
     cm = cost if cost is not None else _default_cost(table.kind)
     fp = config_fingerprint(cfg, table.buckets(), table.q_values(), table.kind, cm)
     if fp != table.fingerprint:
@@ -960,7 +986,10 @@ def probe_plan_table(
         q_sel = [int(c % nq) for c in cells if c // nq == b]
         batch, seq_b = buckets[int(b)]
         graph = lower_config(cfg, batch=batch, seq=seq_b, kind=table.kind)
-        res = sweep_jax(graph, cm, [qs[j] for j in q_sel], backend=backend)
+        res = solve(PartitionSpec(
+            graph=graph, cost=cm, q_grid=tuple(qs[j] for j in q_sel),
+            backend=backend,
+        )).sweep
         for qi, j in enumerate(q_sel):
             where = f"cell (bucket {buckets[int(b)]}, Q={qs[j]})"
             if graph.n_tasks != int(table.n_tasks[b]):

@@ -131,7 +131,8 @@ def plan_remat(cfg: ModelConfig, batch: int, seq: int,
     """
     import numpy as np
 
-    from .partition import q_min as _q_min, sweep as _sweep
+    from .engine import PartitionSpec, default_engine
+    from .partition import q_min as _q_min
 
     profiles, long_lived = profile_model(cfg, batch, seq)
     mem_graph = build_activation_graph(profiles, long_lived, kind="memory")
@@ -140,7 +141,10 @@ def plan_remat(cfg: ModelConfig, batch: int, seq: int,
     qs = list(np.geomspace(qmn, max(hbm_budget_bytes, qmn * 1.0001), 24))
     part: Optional[Partition] = None
     best_recompute = None
-    for cand in _sweep(mem_graph, mem, qs):
+    cands = default_engine().solve(PartitionSpec(
+        graph=mem_graph, cost=mem, q_grid=tuple(qs), backend="numpy",
+    )).partitions()
+    for cand in cands:
         if cand is None:
             continue
         saved_c, rec = _saved_and_recompute(profiles, mem_graph, cand)

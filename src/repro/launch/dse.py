@@ -39,11 +39,12 @@ import sys
 import time
 from typing import List, Optional, Sequence, Tuple, Union
 
+from ..api import QGridSharding
 from ..core.plan_table import (
     PlanTable,
+    build_plan_table,
     extend_plan_table,
     probe_plan_table,
-    shard_plan_table,
     _default_cost,
 )
 from .mesh import shard_devices
@@ -74,10 +75,10 @@ def build_sharded_table_for_arch(
     cm = _default_cost(kind)
     graphs = lower_buckets(cfg, shape_buckets, kind)
     qs = derive_q_grid(graphs, cm, n_q)
-    return shard_plan_table(
-        cfg, shape_buckets, qs, n_shards=n_shards,
-        devices=shard_devices(n_shards), kind=kind, cost=cm,
+    return build_plan_table(
+        cfg, shape_buckets, qs, kind=kind, cost=cm,
         cache_dir=cache_dir, graphs=graphs,
+        sharding=QGridSharding(n_shards, shard_devices(n_shards)),
     )
 
 

@@ -46,7 +46,7 @@ from typing import Dict, List, Optional, Tuple, Union
 
 import numpy as np
 
-from ..configs import SMOKE_CONFIGS, get_config
+from ..configs import resolve_config as _resolve_config
 from ..configs.base import ModelConfig
 from ..core.layer_profile import lower_config, profile_model, build_activation_graph
 from ..core.offload import OffloadPlan, price_offload_bounds
@@ -57,7 +57,6 @@ from ..core.plan_table import (
     SegmentPlan,
     build_plan_table,
     probe_plan_table,
-    shard_plan_table,
     _default_cost,
 )
 from ..core.remat_policy import RematPlan, remat_from_bounds
@@ -73,8 +72,11 @@ __all__ = [
 
 
 def resolve_config(arch: str, smoke: bool = True) -> ModelConfig:
-    """The same (arch, smoke) → ModelConfig mapping serve.py uses."""
-    return SMOKE_CONFIGS[arch] if smoke else get_config(arch)
+    """Smoke-first view of the shared :func:`repro.configs.resolve_config`
+    (the launch CLIs default to the smoke registry; serve.py, the DSE CLI,
+    the plan-table builders, and the façade all resolve through the same
+    helper)."""
+    return _resolve_config(arch, smoke=smoke)
 
 
 class ServePlanner:
@@ -235,25 +237,25 @@ def build_table_for_arch(
     n_shards: Optional[int] = None,
 ) -> PlanTable:
     """Convenience offline build: derive the Q grid from the buckets
-    (:func:`derive_q_grid`) and solve the whole grid in one batched engine
+    (:func:`derive_q_grid`) and solve the whole grid in one batched façade
     call — or, with ``n_shards``, one Q-sharded multi-device call
-    (:func:`repro.core.plan_table.shard_plan_table`; same bytes either way).
+    (``build_plan_table(..., sharding=QGridSharding(...))``; same bytes
+    either way).
     """
     cfg = resolve_config(arch, smoke)
     cm = _default_cost(kind)
     graphs = lower_buckets(cfg, shape_buckets, kind)
     qs = derive_q_grid(graphs, cm, n_q)
+    sharding = None
     if n_shards is not None:
+        from ..api import QGridSharding
         from .mesh import shard_devices  # jax device state: keep import local
 
-        return shard_plan_table(
-            cfg, shape_buckets, qs, n_shards=n_shards,
-            devices=shard_devices(n_shards), kind=kind, cost=cm,
-            cache_dir=cache_dir, graphs=graphs,
-        )
+        # shard_devices is None on device-starved hosts (sequential fallback)
+        sharding = QGridSharding(n_shards, shard_devices(n_shards))
     return build_plan_table(
         cfg, shape_buckets, qs, kind=kind, cost=cm, cache_dir=cache_dir,
-        graphs=graphs,
+        graphs=graphs, sharding=sharding,
     )
 
 

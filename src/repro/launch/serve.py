@@ -37,7 +37,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from ..configs import SMOKE_CONFIGS, get_config
+from ..configs import resolve_config
 from ..models import api
 from ..models.sharding import rules_for
 from .mesh import make_host_mesh
@@ -57,7 +57,9 @@ def _host_mesh():
 
 
 def _resolve(arch: str, smoke: bool):
-    return SMOKE_CONFIGS[arch] if smoke else get_config(arch)
+    # the shared repro.configs.resolve_config — serve, planner, DSE, and the
+    # façade all bucket (arch, smoke) → ModelConfig identically
+    return resolve_config(arch, smoke=smoke)
 
 
 @functools.lru_cache(maxsize=None)

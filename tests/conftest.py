@@ -29,6 +29,14 @@ def pytest_configure(config):
         "slow: long-running model-zoo smoke / kernel sweeps "
         "(deselect with -m 'not slow' for the fast tier-1 job)",
     )
+    config.addinivalue_line(
+        "markers",
+        "legacy: intentionally exercises the deprecated solver entry points "
+        "(the pre-façade differential/byte-identity pins). The CI "
+        "deprecation-gate step runs the fast tier with "
+        "-W error::DeprecationWarning and -m 'not legacy', proving no "
+        "internal module still routes through a legacy entry point.",
+    )
 
 
 # -- shared plan-table fixtures ------------------------------------------------

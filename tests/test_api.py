@@ -1,0 +1,597 @@
+"""Façade tier: PartitionSpec → Engine.solve pins.
+
+Three layers, matching the acceptance criteria of the API redesign:
+
+* **Differential per legacy entry point** (marked ``legacy`` — they call the
+  deprecated shims on purpose): one ``Engine.solve(PartitionSpec)`` call
+  reproduces, bit-identically, each of ``optimal_partition``,
+  ``optimal_partition_multi``, ``sweep``, ``optimal_partition_k``,
+  ``q_min``, ``sweep_jax``, ``sweep_jax_batched``, ``sweep_jax_sharded``,
+  ``optimal_partition_jax``, and ``shard_plan_table`` on every smoke config.
+* **Error paths**: ``Infeasible`` and ``UnsupportedObjective`` surface with
+  the same type *and message* from every backend (numpy / scan / pallas /
+  sharded) for the same spec; export mismatches raise the typed
+  :class:`ExportMismatch` everywhere.
+* **Registry**: backends self-register with capability flags, custom
+  registries dispatch, and every legacy entry point emits exactly one
+  :class:`DeprecationWarning`.
+
+The static no-legacy-imports check at the bottom is the other half of the
+deprecation story: no non-test module under ``src/`` imports a legacy entry
+point directly (the CI gate enforces the dynamic version with
+``-W error::DeprecationWarning``).
+"""
+
+import ast
+import os
+import random
+import warnings
+
+import numpy as np
+import pytest
+
+from conftest import PLAN_BUCKETS
+from helpers_random import random_cost_model, random_task_graph
+
+from repro.api import (
+    Engine,
+    EngineError,
+    ExportMismatch,
+    Infeasible,
+    PartitionSpec,
+    QGridSharding,
+    Solution,
+    SpecError,
+    UnsupportedObjective,
+    backend_names,
+    default_engine,
+    register_backend,
+    solve,
+)
+from repro.configs import SMOKE_CONFIGS, resolve_config
+from repro.core import lower_config, q_min, whole_app_partition
+from repro.core.layer_profile import default_cost_model
+
+ARCHS = sorted(SMOKE_CONFIGS)
+
+
+@pytest.fixture(scope="session")
+def arch_case():
+    """arch → (graph, cost model, small Q grid spanning infeasible→whole-app),
+    lowered once per session (every differential test reuses it)."""
+    cache = {}
+
+    def _case(arch):
+        if arch not in cache:
+            cfg = SMOKE_CONFIGS[arch]
+            cm = default_cost_model("time")
+            g = lower_config(cfg, batch=2, seq=16, kind="time")
+            qmn = q_min(g, cm)
+            hi = whole_app_partition(g, cm).e_total
+            qs = [qmn * 0.5, qmn, float(np.sqrt(qmn * hi)), hi * 1.1, None]
+            cache[arch] = (g, cm, qs)
+        return cache[arch]
+
+    return _case
+
+
+def _assert_parts_equal(a, b, ctx=""):
+    """Bit-level equality of two Optional[Partition] lists."""
+    assert len(a) == len(b), ctx
+    for i, (p, q) in enumerate(zip(a, b)):
+        assert (p is None) == (q is None), (ctx, i)
+        if p is None:
+            continue
+        assert p.bounds == q.bounds, (ctx, i)
+        assert p.q_max == q.q_max, (ctx, i)
+        assert p.e_total == q.e_total, (ctx, i)
+        assert [d.total for d in p.bursts] == [d.total for d in q.bursts], (ctx, i)
+
+
+def _assert_sweeps_equal(a, b, ctx=""):
+    assert a.n_tasks == b.n_tasks, ctx
+    for field in ("dp", "parent", "e_total", "feasible", "starts"):
+        assert getattr(a, field).tobytes() == getattr(b, field).tobytes(), \
+            (ctx, field)
+
+
+# ---------------------------------------------------------------------------
+# Differential: one façade call per legacy entry point, every smoke config
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_optimal_partition(arch, arch_case):
+    from repro.core.partition import optimal_partition
+
+    g, cm, qs = arch_case(arch)
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_max=qs[2], backend="numpy"))
+    _assert_parts_equal([sol.partition()], [optimal_partition(g, cm, qs[2])])
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_optimal_partition_multi_and_sweep(arch, arch_case):
+    from repro.core.partition import optimal_partition_multi, sweep
+
+    g, cm, qs = arch_case(arch)
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_grid=tuple(qs),
+                              backend="numpy"))
+    _assert_parts_equal(sol.partitions(), optimal_partition_multi(g, cm, qs))
+    _assert_parts_equal(sol.partitions(), sweep(g, cm, qs))
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+@pytest.mark.parametrize("k_objective", ["sum", "max"])
+def test_facade_matches_optimal_partition_k(arch, k_objective, arch_case):
+    from repro.core.partition import optimal_partition_k
+
+    g, cm, qs = arch_case(arch)
+    k = min(3, g.n_tasks)
+    for backend in ("numpy", "scan"):
+        sol = solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
+                                  n_bursts=k, k_objective=k_objective,
+                                  backend=backend))
+        _assert_parts_equal(
+            [sol.partition()],
+            [optimal_partition_k(g, cm, k, objective=k_objective)],
+            ctx=backend,
+        )
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_minimax_matches_q_min(arch, arch_case):
+    """objective='minimax' == the (non-deprecated) numpy q_min, on both the
+    numpy and scan backends, bit-for-bit."""
+    g, cm, qs = arch_case(arch)
+    ref = q_min(g, cm)
+    for backend in ("numpy", "scan"):
+        sol = solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
+                                  backend=backend))
+        assert sol.q_min() == ref, backend
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_sweep_jax(arch, arch_case):
+    from repro.core.partition_jax import sweep_jax
+
+    g, cm, qs = arch_case(arch)
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_grid=tuple(qs)))
+    _assert_sweeps_equal(sol.sweep, sweep_jax(g, cm, qs))
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_sweep_jax_batched(arch, arch_case):
+    from repro.core.partition_jax import sweep_jax_batched
+
+    g, cm, qs = arch_case(arch)
+    g2 = lower_config(SMOKE_CONFIGS[arch], batch=2, seq=24, kind="time")
+    sol = solve(PartitionSpec(graphs=(g, g2), cost=cm, q_grid=tuple(qs)))
+    for a, b in zip(sol.sweeps, sweep_jax_batched([g, g2], cm, qs)):
+        _assert_sweeps_equal(a, b, ctx=arch)
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_sweep_jax_sharded(arch, arch_case):
+    from repro.core.partition_jax import sweep_jax_sharded
+
+    g, cm, qs = arch_case(arch)
+    sol = solve(PartitionSpec(graphs=(g,), cost=cm, q_grid=tuple(qs),
+                              sharding=QGridSharding(n_shards=2)))
+    ref = sweep_jax_sharded([g], cm, qs, n_shards=2)
+    _assert_sweeps_equal(sol.sweeps[0], ref[0], ctx=arch)
+
+
+@pytest.mark.legacy
+@pytest.mark.parametrize("arch", ARCHS)
+def test_facade_matches_optimal_partition_jax(arch, arch_case):
+    from repro.core.partition_jax import optimal_partition_jax
+
+    g, cm, qs = arch_case(arch)
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_max=qs[2]))
+    _assert_parts_equal([sol.partition()],
+                        [optimal_partition_jax(g, cm, qs[2])])
+
+
+@pytest.mark.legacy
+def test_facade_matches_pallas_sweep():
+    """The CSR/Pallas backend through the façade == legacy sweep_jax
+    (interpret mode; one config keeps the kernel tier fast)."""
+    from repro.core.partition_jax import sweep_jax
+
+    cfg = SMOKE_CONFIGS["qwen3-4b"]
+    cm = default_cost_model("time")
+    g = lower_config(cfg, batch=2, seq=16, kind="time")
+    qs = (q_min(g, cm), None)
+    sol = solve(PartitionSpec(graph=g, cost=cm, q_grid=qs, backend="pallas"))
+    _assert_sweeps_equal(sol.sweep, sweep_jax(g, cm, list(qs),
+                                              backend="pallas"))
+    assert sol.backend == "pallas"
+
+
+@pytest.mark.legacy
+def test_build_plan_table_sharding_matches_shard_plan_table(smoke_plan_table):
+    """build_plan_table(sharding=...) — the spec-shaped replacement — is
+    byte-identical to the deprecated shard_plan_table."""
+    from repro.core.plan_table import PlanTable, shard_plan_table
+
+    cfg, cm, qs, single = smoke_plan_table("qwen3-4b")
+    via_param = smoke_plan_table(
+        "qwen3-4b", sharding=QGridSharding(4)
+    )[3]
+    legacy = shard_plan_table(cfg, PLAN_BUCKETS, qs, n_shards=4, cost=cm)
+    for name in PlanTable._PAYLOAD:
+        assert getattr(via_param, name).tobytes() == \
+            getattr(legacy, name).tobytes(), name
+    assert via_param.content_digest() == legacy.content_digest()
+    assert via_param.content_digest() == single.content_digest()
+
+
+@pytest.mark.legacy
+def test_facade_mixed_auto_batch_matches_legacy(monkeypatch):
+    """A mixed dense/CSR/TaskGraph batch under backend='auto' resolves and
+    groups exactly like the legacy batched entry point."""
+    from repro.core import partition_jax
+    from repro.core.partition_jax import sweep_jax_batched
+
+    rng = random.Random(11)
+    g1, g2, g3 = (random_task_graph(rng, max_tasks=6) for _ in range(3))
+    cm = random_cost_model(rng)
+    monkeypatch.setattr(partition_jax, "_AUTO_DENSE_BYTES", 0)  # g3 → pallas
+    qs = (None, 0.5)
+    batch = (g1.to_arrays(), g2.to_csr_arrays(), g3)
+    sol = solve(PartitionSpec(graphs=batch, cost=cm, q_grid=qs))
+    assert sol.backend == "pallas+scan"
+    for a, b in zip(sol.sweeps, sweep_jax_batched(list(batch), cm, list(qs))):
+        _assert_sweeps_equal(a, b)
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shims: every legacy entry point warns exactly once per call
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.legacy
+def test_every_legacy_entry_point_warns():
+    from repro.core import partition as p
+    from repro.core import partition_jax as pj
+    from repro.core import plan_table as pt
+
+    rng = random.Random(0)
+    g = random_task_graph(rng, max_tasks=5)
+    cm = random_cost_model(rng)
+    cfg = SMOKE_CONFIGS["qwen3-4b"]
+    cmt = default_cost_model("time")
+    calls = [
+        ("optimal_partition", lambda: p.optimal_partition(g, cm)),
+        ("optimal_partition_multi",
+         lambda: p.optimal_partition_multi(g, cm, [None])),
+        ("sweep", lambda: p.sweep(g, cm, [1e9])),
+        ("optimal_partition_k", lambda: p.optimal_partition_k(g, cm, 1)),
+        ("sweep_jax", lambda: pj.sweep_jax(g, cm, [None])),
+        ("sweep_jax_batched", lambda: pj.sweep_jax_batched([g], cm, [None])),
+        ("sweep_jax_sharded",
+         lambda: pj.sweep_jax_sharded([g], cm, [None, 1e9], n_shards=2)),
+        ("optimal_partition_jax", lambda: pj.optimal_partition_jax(g, cm)),
+        ("shard_plan_table",
+         lambda: pt.shard_plan_table(cfg, [(2, 16)], [None], n_shards=1,
+                                     cost=cmt)),
+    ]
+    for name, fn in calls:
+        with warnings.catch_warnings(record=True) as rec:
+            warnings.simplefilter("always")
+            fn()
+        dep = [w for w in rec if issubclass(w.category, DeprecationWarning)
+               and "legacy Julienning entry point" in str(w.message)]
+        assert len(dep) == 1, (name, [str(w.message) for w in rec])
+        assert name in str(dep[0].message), name
+
+
+# ---------------------------------------------------------------------------
+# Error paths: identical surfacing across numpy / scan / pallas / sharded
+# ---------------------------------------------------------------------------
+
+BACKEND_VARIANTS = [
+    ("numpy", None),
+    ("scan", None),
+    ("pallas", None),
+    ("scan", QGridSharding(n_shards=2)),
+]
+VARIANT_IDS = ["numpy", "scan", "pallas", "sharded"]
+
+
+@pytest.fixture(scope="module")
+def tiny_case():
+    rng = random.Random(3)
+    g = random_task_graph(rng, max_tasks=6, min_tasks=3)
+    cm = random_cost_model(rng)
+    return g, cm
+
+
+@pytest.mark.parametrize("backend,sharding", BACKEND_VARIANTS, ids=VARIANT_IDS)
+def test_infeasible_sum_surfaces_identically(backend, sharding, tiny_case):
+    """An infeasible Q cell never fails at solve() time; it surfaces as the
+    same Infeasible (same message) from Solution.partition() everywhere."""
+    g, cm = tiny_case
+    q_bad = q_min(g, cm) * 0.25
+    spec = PartitionSpec(graph=g, cost=cm, q_grid=(q_bad, None),
+                         backend=backend, sharding=sharding)
+    sol = solve(spec)
+    assert sol.e_total()[0] == np.inf
+    with pytest.raises(Infeasible) as e:
+        sol.partition(q_index=0)
+    assert str(e.value) == f"Q_max={q_bad} admits no partition"
+    sol.partition(q_index=1)  # the unbounded cell is always feasible
+
+
+@pytest.mark.parametrize("backend", ["numpy", "scan", "pallas"])
+def test_unsupported_objective_surfaces_identically(backend, tiny_case):
+    """minimax/exact_k run on numpy and scan and raise UnsupportedObjective
+    on pallas (sum-only until the §4.4 kernel mode lands)."""
+    g, cm = tiny_case
+    ref_qmin = q_min(g, cm)
+    for objective, extra in (("minimax", {}),
+                             ("exact_k", {"n_bursts": 2})):
+        spec = PartitionSpec(graph=g, cost=cm, objective=objective,
+                             backend=backend, **extra)
+        if backend == "pallas":
+            with pytest.raises(UnsupportedObjective) as e:
+                solve(spec)
+            assert "'pallas'" in str(e.value) and objective in str(e.value)
+            continue
+        sol = solve(spec)
+        if objective == "minimax":
+            assert sol.q_min() == ref_qmin
+        else:
+            assert sol.partition().n_bursts == 2
+
+
+def test_sharding_requires_a_q_grid_objective(tiny_case):
+    """Only objective='sum' has a Q grid to shard: a sharded minimax/exact_k
+    spec is rejected at construction, uniformly — no backend gets to
+    silently ignore it."""
+    g, cm = tiny_case
+    for objective, extra in (("minimax", {}), ("exact_k", {"n_bursts": 2})):
+        with pytest.raises(SpecError):
+            PartitionSpec(graph=g, cost=cm, objective=objective,
+                          sharding=QGridSharding(2), **extra)
+
+
+@pytest.mark.parametrize("backend", ["numpy", "scan"])
+def test_infeasible_exact_k_surfaces_identically(backend, tiny_case):
+    g, cm = tiny_case
+    q_bad = q_min(g, cm) * 0.25  # below Q_min: no 1..n-burst partition fits
+    with pytest.raises(Infeasible) as e:
+        solve(PartitionSpec(graph=g, cost=cm, objective="exact_k", n_bursts=2,
+                            q_max=q_bad, backend=backend))
+    assert str(e.value) == f"no 2-burst partition within Q_max={q_bad}"
+
+
+def test_export_mismatch_is_typed_everywhere(tiny_case):
+    g, cm = tiny_case
+    cases = [
+        (g.to_csr_arrays(), "scan"),    # CSR into the dense backend
+        (g.to_arrays(), "pallas"),      # dense into the CSR backend
+        (g.to_arrays(), "numpy"),       # any export into the reference DP
+        (g.to_csr_arrays(), "numpy"),
+    ]
+    for export, backend in cases:
+        with pytest.raises(ExportMismatch) as e:
+            solve(PartitionSpec(graph=export, cost=cm, q_max=None,
+                                backend=backend))
+        assert isinstance(e.value, TypeError), (backend, type(export))
+    with pytest.raises(ExportMismatch):
+        solve(PartitionSpec(graph=object(), cost=cm, q_max=None))
+    # layout gaps beat objective gaps: scan *does* implement minimax, the
+    # CSR layout is what no minimax-capable backend consumes
+    with pytest.raises(ExportMismatch):
+        solve(PartitionSpec(graph=g.to_csr_arrays(), cost=cm,
+                            objective="minimax"))
+    # exact_k prices bursts on the graph — exports are rejected up front
+    # (before any solve), backend-independently
+    from repro.core import partition_jax as pj
+
+    solves = dict(pj.SOLVE_COUNT)
+    with pytest.raises(ExportMismatch):
+        solve(PartitionSpec(graph=g.to_arrays(), cost=cm,
+                            objective="exact_k", n_bursts=2, backend="scan"))
+    assert dict(pj.SOLVE_COUNT) == solves  # doomed spec never hit the engine
+
+
+def test_numpy_backend_rejects_sharding(tiny_case):
+    g, cm = tiny_case
+    with pytest.raises(SpecError):
+        solve(PartitionSpec(graph=g, cost=cm, q_grid=(None,),
+                            backend="numpy", sharding=QGridSharding(2)))
+
+
+# ---------------------------------------------------------------------------
+# Spec validation + Solution accessors
+# ---------------------------------------------------------------------------
+
+
+def test_spec_validation(tiny_case):
+    g, cm = tiny_case
+    with pytest.raises(SpecError):
+        PartitionSpec()                                  # no input source
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, graphs=(g,))              # two sources
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, q_grid=(None,), q_max=1.0)
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, q_grid=())
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, objective="minimax", q_max=1.0)
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, objective="exact_k")      # n_bursts missing
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, n_bursts=2)               # without exact_k
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, objective="bottleneck")
+    with pytest.raises(SpecError):
+        PartitionSpec(graph=g, objective="exact_k", n_bursts=2,
+                      k_objective="min")
+    with pytest.raises(SpecError):
+        QGridSharding(0)
+    with pytest.raises(SpecError):
+        solve(PartitionSpec(graph=g, q_max=None))        # cost required
+    with pytest.raises(SpecError):
+        solve(PartitionSpec(graph=g, cost=cm, backend="mosaic"))
+    with pytest.raises(SpecError):
+        solve(PartitionSpec(graph=g, cost=cm), q_max=1.0)  # spec + kwargs
+    with pytest.raises(SpecError):
+        default_engine().solve("not a spec")
+
+
+def test_spec_is_immutable_and_normalized(tiny_case):
+    g, cm = tiny_case
+    spec = PartitionSpec(graph=g, cost=cm, q_grid=[1.0, None])
+    assert spec.q_grid == (1.0, None)
+    assert spec.q_values == (1.0, None)
+    with pytest.raises(Exception):
+        spec.backend = "scan"
+    assert PartitionSpec(graph=g, cost=cm).q_values == (None,)
+    assert PartitionSpec(graph=g, cost=cm,
+                         objective="minimax").q_values == ()
+
+
+def test_config_lowered_spec(arch_case):
+    """config= specs lower exactly like the plan-table builders: same graphs,
+    default cost per kind, smoke registry honored."""
+    g_ref, cm, qs = arch_case("qwen3-4b")
+    sol = solve(PartitionSpec(config="qwen3-4b", shapes=((2, 16),),
+                              smoke=True, q_grid=tuple(qs)))
+    direct = solve(PartitionSpec(graph=g_ref, cost=cm, q_grid=tuple(qs)))
+    _assert_sweeps_equal(sol.sweeps[0], direct.sweep)
+    assert sol.cost.name == cm.name
+    assert resolve_config("qwen3-4b", smoke=True) is SMOKE_CONFIGS["qwen3-4b"]
+
+
+def test_solution_accessor_guards(tiny_case):
+    g, cm = tiny_case
+    sum_sol = solve(PartitionSpec(graph=g, cost=cm, q_max=None,
+                                  backend="numpy"))
+    with pytest.raises(EngineError):
+        sum_sol.q_min()
+    with pytest.raises(EngineError):
+        _ = sum_sol.sweep          # numpy backend has no JaxSweep payload
+    mm_sol = solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
+                                 backend="scan"))
+    with pytest.raises(EngineError):
+        mm_sol.partitions()
+    multi = solve(PartitionSpec(graphs=(g, g), cost=cm, q_max=None))
+    with pytest.raises(EngineError):
+        _ = multi.sweep            # 2 graphs: index .sweeps instead
+    assert multi.n_graphs == 2 and "2 graph" in multi.summary()
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+
+def test_registry_flags_and_names():
+    from repro.core.engine import backend_info
+
+    assert {"numpy", "scan", "pallas"} <= set(backend_names())
+    assert backend_info("scan").supports_sharding
+    assert not backend_info("scan").supports_csr
+    assert backend_info("pallas").supports_csr
+    assert backend_info("pallas").objectives == frozenset({"sum"})
+    assert not backend_info("numpy").auto_eligible
+    assert backend_info("numpy").objectives == \
+        frozenset({"sum", "minimax", "exact_k"})
+
+
+def test_custom_backend_registration(tiny_case):
+    """Downstream code can register a backend with capability flags and
+    address it by name; capability checks guard its inputs."""
+    from repro.core.engine import _REGISTRY
+
+    g, cm = tiny_case
+    registry = dict(_REGISTRY)
+    seen = {}
+
+    @register_backend("recorder", objectives=("sum",), supports_dense=True,
+                      auto_eligible=False, registry=registry)
+    class Recorder:
+        def solve(self, req):
+            seen["req"] = req
+            return {"parts": tuple((None,) * len(req.q_values)
+                                   for _ in req.graphs)}
+
+    assert "recorder" not in backend_names()          # global untouched
+    eng = Engine(registry=registry)
+    sol = eng.solve(PartitionSpec(graph=g, cost=cm, q_grid=(1.0, None),
+                                  backend="recorder"))
+    assert sol.backend == "recorder"
+    assert seen["req"].q_values == (1.0, None)
+    with pytest.raises(Infeasible):
+        sol.partition()                               # recorder said None
+    with pytest.raises(ExportMismatch):
+        eng.solve(PartitionSpec(graph=g.to_csr_arrays(), cost=cm,
+                                backend="recorder"))
+    with pytest.raises(SpecError):
+        register_backend("bad", objectives=("frobnicate",))
+
+
+def test_register_backend_rejects_unknown_objective_before_decorating():
+    with pytest.raises(SpecError):
+        register_backend("x", objectives=("sum", "nope"), registry={})
+
+
+# ---------------------------------------------------------------------------
+# Static guard: no non-test module in src/ imports a legacy entry point
+# ---------------------------------------------------------------------------
+
+LEGACY_NAMES = {
+    "optimal_partition", "optimal_partition_multi", "optimal_partition_k",
+    "sweep", "sweep_jax", "sweep_jax_batched", "sweep_jax_sharded",
+    "optimal_partition_jax", "shard_plan_table",
+}
+# attribute accesses are checked too, for the names that are unambiguous
+# ("sweep" is excluded: Solution.sweep / Solution.sweeps are façade API)
+LEGACY_ATTRS = LEGACY_NAMES - {"sweep"}
+# the exact modules that define / re-export the shims (everything else in
+# src/, *including* other packages' __init__.py files, is checked)
+DEFINING = {
+    os.path.join("repro", "core", "partition.py"),
+    os.path.join("repro", "core", "partition_jax.py"),
+    os.path.join("repro", "core", "plan_table.py"),
+    os.path.join("repro", "core", "__init__.py"),
+}
+
+
+def test_no_src_module_imports_legacy_entry_points():
+    """No non-test module under src/ reaches a legacy entry point — neither
+    `from x import optimal_partition` nor `mod.optimal_partition(...)`. The
+    CI deprecation gate is the dynamic half of this check; the AST walk
+    also catches module-level and slow-path-only call sites no fast test
+    executes."""
+    src = os.path.join(os.path.dirname(os.path.dirname(
+        os.path.abspath(__file__))), "src")
+    offenders = []
+    for dirpath, _, files in os.walk(src):
+        for fname in files:
+            if not fname.endswith(".py"):
+                continue
+            path = os.path.join(dirpath, fname)
+            if os.path.relpath(path, src) in DEFINING:
+                continue
+            tree = ast.parse(open(path).read(), filename=path)
+            for node in ast.walk(tree):
+                bad = set()
+                if isinstance(node, ast.ImportFrom):
+                    bad = {a.name for a in node.names} & LEGACY_NAMES
+                elif isinstance(node, ast.Attribute):
+                    bad = {node.attr} & LEGACY_ATTRS
+                if bad:
+                    offenders.append(
+                        (os.path.relpath(path, src), node.lineno, sorted(bad))
+                    )
+    assert not offenders, offenders

@@ -17,6 +17,11 @@ tests/test_serve_plan.py and the sharded-DSE tier in tests/test_dse_shard.py.
 
 import numpy as np
 import pytest
+# These suites pin the *legacy* entry points (deprecation shims) bit-for-bit
+# against the facade-era implementations; the CI deprecation gate excludes
+# them via -m "not legacy" (see conftest).
+pytestmark = pytest.mark.legacy
+
 
 from conftest import PLAN_BUCKETS
 

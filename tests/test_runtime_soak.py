@@ -28,7 +28,8 @@ from repro.core import (
 )
 from repro.core.apps.headcount import VISUAL, build_graph
 
-pytestmark = pytest.mark.slow  # ~30 s of repeated 550-task executions
+pytestmark = [pytest.mark.slow,  # ~30 s of repeated 550-task executions
+              pytest.mark.legacy]  # drives the legacy optimal_partition shim
 
 CM = PAPER_FRAM_MODEL
 N_SCHEDULES = 20
