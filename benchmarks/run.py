@@ -558,6 +558,90 @@ def api_facade(smoke=False, json_out=None):
         )
 
 
+def serving_traffic(smoke=False, json_out=None):
+    """Continuous-traffic serving: the plan table under sustained load.
+
+    Drives :class:`repro.launch.traffic.TrafficHarness` over the real
+    planned executor with a deterministic burst of same-shape requests plus
+    an admission-controlled run (capacity ≈ 1.5 requests, income ≈ 0.9
+    request-energies per unit virtual time → at least one deferral). Rows:
+    sustained requests/sec, wall p50/p95/p99 latency, plan-cache hit rate,
+    admission/deferral/reject counts, and the zero-retrace acceptance bit.
+    Results land in BENCH_serving.json. This section is also the acceptance
+    gate: any post-warmup retrace or a failed admission split exits nonzero.
+    """
+    from repro.launch.planner import build_table_for_arch
+    from repro.launch.serve import PlannedExecutor
+    from repro.launch.traffic import (
+        HarvestModel, TrafficHarness, deterministic_arrivals, request_energy)
+
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    arch = "qwen3-4b"
+    batch, prompt_len, gen = 2, 8, 6
+    n_requests = 8 if smoke else 32
+    max_seq = prompt_len + gen
+    table = build_table_for_arch(arch, [(batch, max_seq)], n_q=8)
+    ex = PlannedExecutor(arch, table)
+    plan = ex.planner.plan_for(batch, max_seq, None)
+    _, e_req = request_energy(plan, gen, None, ex.planner.e_startup)
+    reqs = deterministic_arrivals(n_requests, 0.0, (batch, prompt_len, gen))
+
+    # throughput run: unlimited harvest, compile outside the measured window
+    harness = TrafficHarness(ex)
+    harness.warmup(reqs)
+    report = harness.run(reqs)
+    pct = report.latency_percentiles_ms()
+    row("serving_traffic.requests", report.completed,
+        f"{arch} {batch}x{prompt_len}x{gen}, deterministic burst")
+    row("serving_traffic.requests_per_s", f"{report.requests_per_s:.1f}",
+        "sustained, warm caches")
+    row("serving_traffic.latency_p50_ms", f"{pct['p50']:.1f}",
+        "wall-clock arrival→complete")
+    row("serving_traffic.latency_p95_ms", f"{pct['p95']:.1f}", "")
+    row("serving_traffic.latency_p99_ms", f"{pct['p99']:.1f}", "")
+    row("serving_traffic.hit_rate", f"{report.hit_rate:.3f}",
+        "plan-cache lookups answered from the table; acceptance: 1.0")
+    row("serving_traffic.retraces", report.retraces,
+        "jit retraces after warmup; acceptance: 0")
+
+    # admission run: pool holds ~1.5 requests, income ~0.9 req/unit-time
+    harness2 = TrafficHarness(
+        ex, harvest=HarvestModel(capacity=1.5 * e_req, rate=0.9 * e_req))
+    report2 = harness2.run(deterministic_arrivals(
+        max(3, n_requests // 4), 0.0, (batch, prompt_len, gen)))
+    row("serving_traffic.admitted", report2.admitted,
+        "capacity=1.5 req, rate=0.9 req/t")
+    row("serving_traffic.deferred", report2.deferred,
+        "acceptance: >=1 (pool too small for the burst)")
+    row("serving_traffic.rejected", report2.rejected, "")
+    row("serving_traffic.energy_spent", f"{report2.energy_spent:.4f}",
+        f"one request draws {e_req:.4f} (table units)")
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_serving.json")
+    _merge_bench_json(path, records, smoke=bool(smoke))
+
+    failures = []
+    if report.retraces:
+        failures.append(f"{report.retraces} retraces after warmup "
+                        f"({report.trace_delta})")
+    if report.completed != n_requests or report.hit_rate != 1.0:
+        failures.append(
+            f"throughput run: {report.completed}/{n_requests} completed, "
+            f"hit rate {report.hit_rate}")
+    if report2.deferred < 1 or report2.completed != report2.arrived:
+        failures.append(
+            f"admission run: {report2.deferred} deferred, "
+            f"{report2.completed}/{report2.arrived} completed")
+    if failures:
+        raise SystemExit("serving_traffic: " + "; ".join(failures))
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -635,6 +719,7 @@ SECTIONS = {
     "plan_table": plan_table_bench,
     "plan_table_sharded": plan_table_sharded,
     "api_facade": api_facade,
+    "serving_traffic": serving_traffic,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -660,7 +745,8 @@ def main(argv=None) -> None:
         fn = SECTIONS[name]
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
-        elif name in ("plan_table", "plan_table_sharded", "api_facade"):
+        elif name in ("plan_table", "plan_table_sharded", "api_facade",
+                      "serving_traffic"):
             fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()

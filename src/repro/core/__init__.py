@@ -83,12 +83,14 @@ from .plan_table import (
     shard_plan_table,
 )
 from .runtime import (
+    COMMIT_STATS,
     BurstRuntime,
     DirNVM,
     ExecutionStats,
     MemoryNVM,
     PowerFailure,
     execute_atomic,
+    reset_commit_stats,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]

@@ -43,7 +43,24 @@ __all__ = [
     "BurstRuntime",
     "ExecutionStats",
     "execute_atomic",
+    "COMMIT_STATS",
+    "reset_commit_stats",
 ]
+
+# Process-wide cycle/commit observability for harnesses that drive many
+# runtimes at once (repro.launch.traffic): every committed burst and every
+# replayed burst (a re-run of an index whose first attempt lost power before
+# the commit) counts here, across all BurstRuntime instances. Consumers must
+# snapshot-and-diff rather than read absolutes — see reset_commit_stats().
+COMMIT_STATS = {"commits": 0, "replays": 0}
+
+
+def reset_commit_stats() -> None:
+    """Zero the process-global commit counters (test isolation). This resets
+    the *counters* only; NVM state and per-runtime ExecutionStats are
+    untouched."""
+    for k in COMMIT_STATS:
+        COMMIT_STATS[k] = 0
 
 
 class PowerFailure(RuntimeError):
@@ -126,6 +143,7 @@ class ExecutionStats:
     bytes_loaded: int = 0
     bytes_stored: int = 0
     energy: float = 0.0  # model-accounted energy of what actually ran
+    replays: int = 0  # bursts re-entered after a pre-commit power failure
 
 
 CrashHook = Callable[[int, str], None]
@@ -153,6 +171,7 @@ class BurstRuntime:
         self.crash_hook = crash_hook
         self.on_commit = on_commit
         self.stats = ExecutionStats()
+        self._attempted: Set[int] = set()
 
     # -- one burst = one "energy quantum" --------------------------------------
 
@@ -161,6 +180,10 @@ class BurstRuntime:
         g = self.graph
         detail = self.partition.bursts[b]
         volatile: Dict[str, Any] = {}
+        if b in self._attempted:  # a prior attempt lost power before commit
+            self.stats.replays += 1
+            COMMIT_STATS["replays"] += 1
+        self._attempted.add(b)
 
         # DMA in: dependency-optimized load set
         load_set = self._load_set(i, j)
@@ -194,6 +217,7 @@ class BurstRuntime:
         # linearization point
         self.nvm.commit_index(b + 1)
         self.stats.bursts_run += 1
+        COMMIT_STATS["commits"] += 1
         if self.cost is not None:
             self.stats.energy += detail.total
         if self.on_commit is not None:
@@ -236,6 +260,23 @@ class BurstRuntime:
                 if name not in inputs:
                     raise ValueError(f"missing external packet {name!r}")
                 self.nvm.write(name, inputs[name])
+
+    def step(self) -> bool:
+        """Run exactly one uncommitted burst — one energy cycle / one system
+        activation — and return True once every burst has committed.
+
+        This is the unit the continuous-traffic harness schedules: cycles of
+        many concurrent requests interleave by calling each runtime's
+        ``step()`` in turn. A :class:`PowerFailure` raised mid-burst leaves
+        the committed index unchanged, so the next ``step()`` replays the
+        same burst (the idempotent-recovery contract). External inputs must
+        already be seeded (:meth:`seed_inputs`).
+        """
+        b = self.nvm.read_index()
+        if b >= self.partition.n_bursts:
+            return True
+        self._run_burst(b)
+        return self.nvm.read_index() >= self.partition.n_bursts
 
     def run(self, inputs: Optional[Mapping[str, Any]] = None) -> Dict[str, Any]:
         """Execute to completion, resuming from the committed burst index.

@@ -50,7 +50,7 @@ from ..configs import resolve_config as _resolve_config
 from ..configs.base import ModelConfig
 from ..core.layer_profile import lower_config, profile_model, build_activation_graph
 from ..core.offload import OffloadPlan, price_offload_bounds
-from ..core.partition import q_min, whole_app_partition, within_budget
+from ..core.partition import Infeasible, q_min, whole_app_partition, within_budget
 from ..core.plan_table import (
     PlanTable,
     PlanTableError,
@@ -62,6 +62,7 @@ from ..core.plan_table import (
 from ..core.remat_policy import RematPlan, remat_from_bounds
 
 __all__ = [
+    "ADMISSION_OUTCOMES",
     "ServePlanner",
     "as_planner",
     "request_cycles",
@@ -79,12 +80,39 @@ def resolve_config(arch: str, smoke: bool = True) -> ModelConfig:
     return _resolve_config(arch, smoke=smoke)
 
 
+#: Admission-control outcomes the traffic harness reports per request.
+ADMISSION_OUTCOMES = ("admitted", "deferred", "rejected")
+
+
+def _fresh_planner_stats() -> Dict[str, object]:
+    return {
+        "lookups": 0,
+        "hits": 0,       # lookups answered from the table
+        "misses": 0,     # UnknownBucketError / Infeasible budget
+        "admitted": 0,   # admission-control outcomes (see record_admission)
+        "deferred": 0,
+        "rejected": 0,
+        "by_bucket": {},  # "BATCHxSEQ" -> hit count
+    }
+
+
 class ServePlanner:
-    """O(1) plan lookups for the serving loop, with observability counters."""
+    """O(1) plan lookups for the serving loop, with observability counters.
+
+    ``stats`` carries per-bucket hit/miss counters (every :meth:`plan_for`
+    call) plus the fleet admission counters the continuous-traffic harness
+    reports through :meth:`record_admission`. Counters are process-lifetime
+    for the planner instance; consumers that compare across runs must
+    snapshot-and-diff (or call :meth:`reset_stats` for a fresh baseline).
+    """
 
     def __init__(self, table: PlanTable) -> None:
         self.table = table
-        self.stats: Dict[str, int] = {"lookups": 0}
+        self.stats: Dict[str, object] = _fresh_planner_stats()
+
+    def reset_stats(self) -> None:
+        """Zero all counters (test isolation / per-run baselines)."""
+        self.stats = _fresh_planner_stats()
 
     @classmethod
     def from_file(
@@ -115,9 +143,40 @@ class ServePlanner:
     def plan_for(
         self, batch: int, seq: int, energy_budget: Optional[float] = None
     ) -> SegmentPlan:
-        """Bucket the request shape and return the precomputed plan."""
+        """Bucket the request shape and return the precomputed plan.
+
+        A successful lookup counts as a *hit* (per-bucket, under the
+        ``"BATCHxSEQ"`` key of the covering bucket); an untabulated shape or
+        a budget below the Q grid counts as a *miss* and re-raises.
+        """
         self.stats["lookups"] += 1
-        return self.table.lookup(batch, seq, energy_budget)
+        try:
+            plan = self.table.lookup(batch, seq, energy_budget)
+        except (PlanTableError, Infeasible):
+            self.stats["misses"] += 1
+            raise
+        self.stats["hits"] += 1
+        key = f"{plan.batch}x{plan.seq_bucket}"
+        by = self.stats["by_bucket"]
+        by[key] = by.get(key, 0) + 1
+        return plan
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of lookups answered from the table (0.0 before any)."""
+        n = self.stats["lookups"]
+        return self.stats["hits"] / n if n else 0.0
+
+    def record_admission(self, outcome: str) -> None:
+        """Fleet admission observability: the traffic harness reports each
+        request's outcome ('admitted' | 'deferred' | 'rejected') here so the
+        admission counters live beside the lookup counters they gate on."""
+        if outcome not in ADMISSION_OUTCOMES:
+            raise ValueError(
+                f"unknown admission outcome {outcome!r}; "
+                f"expected one of {ADMISSION_OUTCOMES}"
+            )
+        self.stats[outcome] += 1
 
     # -- derived consumers (no DP solve; bounds come from the table) --------
 
@@ -260,10 +319,29 @@ def build_table_for_arch(
 
 
 def _parse_buckets(text: str) -> List[Tuple[int, int]]:
+    """Parse comma-separated ``BATCHxSEQ`` bucket tokens (e.g. ``2x24,4x48``).
+
+    Each token must be two positive integers joined by an ``x`` (case
+    insensitive). Malformed tokens raise a ValueError naming the offending
+    entry — previously ``"2x"`` or ``"2x24,48"`` died with an opaque
+    "not enough values to unpack".
+    """
     out = []
     for part in text.split(","):
-        b, s = part.lower().split("x")
-        out.append((int(b), int(s)))
+        token = part.strip().lower()
+        batch_s, sep, seq_s = token.partition("x")
+        try:
+            if not sep or not batch_s or not seq_s:
+                raise ValueError
+            bucket = (int(batch_s), int(seq_s))
+            if bucket[0] <= 0 or bucket[1] <= 0:
+                raise ValueError
+        except ValueError:
+            raise ValueError(
+                f"malformed bucket {part.strip()!r} in {text!r}: expected "
+                f"BATCHxSEQ with positive integers (e.g. 2x24)"
+            ) from None
+        out.append(bucket)
     return out
 
 

@@ -42,11 +42,21 @@ from ..models import api
 from ..models.sharding import rules_for
 from .mesh import make_host_mesh
 from .steps import make_constrain
+from .traffic import Continuation, Request
 
-# Trace-time counters for the planned request path (incremented only when
-# XLA actually re-traces; the serving regression test pins these at zero
-# across repeated planned requests of the same shape).
+# Trace-time counters for the serving request path (incremented only when
+# XLA actually re-traces; the serving regression tests pin these at zero
+# across repeated planned *and* unplanned requests of the same shape).
 TRACE_COUNT = {"prefill": 0, "decode": 0}
+
+
+def reset_trace_counts() -> None:
+    """Zero the process-global retrace counters (test isolation). The jit
+    caches themselves are untouched — this resets observability, not
+    compilation state. Consumers that can't rely on a reset (the traffic
+    harness) snapshot-and-diff instead of reading absolutes."""
+    for k in TRACE_COUNT:
+        TRACE_COUNT[k] = 0
 
 
 @functools.lru_cache(maxsize=None)
@@ -63,14 +73,18 @@ def _resolve(arch: str, smoke: bool):
 
 
 @functools.lru_cache(maxsize=None)
-def _step_fns(arch: str, smoke: bool, max_seq: int):
-    """Cached jitted (prefill, decode) for the planned path.
+def _step_fns(arch: str, smoke: bool, max_seq: int, donate: bool = False):
+    """Cached jitted (prefill, decode) for both serving paths.
 
-    Cached per (arch, smoke, max_seq) so repeated requests reuse the same
-    compiled executables. Deliberately **no cache donation**: a replayed
-    cycle must be able to re-read the committed cache from NVM, and donation
-    would invalidate it (donation changes performance, never values, so the
-    unplanned fast path keeps it).
+    Cached per (arch, smoke, max_seq, donate) so repeated requests reuse the
+    same compiled executables. The planned path uses ``donate=False``: a
+    replayed cycle must be able to re-read the committed cache from NVM, and
+    donation would invalidate it. The unplanned path uses ``donate=True``
+    (cache donation on decode — donation changes performance, never values)
+    to keep its original fast-path semantics while still hitting this cache
+    instead of rebuilding ``jax.jit`` wrappers per call. Always pass
+    ``donate=`` by keyword: ``lru_cache`` keys positional and keyword calls
+    differently, and a mixed style would silently double-compile.
     """
     cfg = _resolve(arch, smoke)
     cons = make_constrain(rules_for(cfg.family))
@@ -83,7 +97,9 @@ def _step_fns(arch: str, smoke: bool, max_seq: int):
         TRACE_COUNT["decode"] += 1
         return api.decode_step(cfg, params, cache, tok, pos, constrain=cons)
 
-    return jax.jit(_prefill), jax.jit(_decode)
+    decode = (jax.jit(_decode, donate_argnums=(1,)) if donate
+              else jax.jit(_decode))
+    return jax.jit(_prefill), decode
 
 
 def _pre_batch(cfg, prompts) -> Dict[str, Any]:
@@ -159,58 +175,129 @@ def _request_graph(cfg, params, batch, prompt_len, gen, max_seq,
     return b.build()
 
 
-def _serve_planned(arch, batch, prompt_len, gen, smoke, seed,
-                   plan_table, energy_budget, nvm, crash_hook, report):
-    from ..core import BurstRuntime, CostModel, LinearTransfer, Partition
-    from ..core.burst import burst_detail
-    from ..core.plan_table import PlanTableError
-    from .planner import as_planner, request_cycles
+class PlannedExecutor:
+    """Reusable per-request executor for the planned path.
 
-    planner = as_planner(plan_table)
-    cfg = _resolve(arch, smoke)
-    if planner.table.arch != cfg.name:
-        raise PlanTableError(
-            f"plan table was built for {planner.table.arch!r} but this "
-            f"request is for {cfg.name!r}"
-        )
-    max_seq = prompt_len + gen
-    plan = planner.plan_for(batch, max_seq, energy_budget)
+    Owns the pieces that amortize across a request stream — the resolved
+    config, the :class:`~repro.launch.planner.ServePlanner` (O(1) lookups),
+    a params cache keyed on ``(seed, max_seq)``, and the process-wide jitted
+    step cache — and :meth:`open`\\ s each request as a
+    :class:`~repro.launch.traffic.Continuation` whose energy cycles commit
+    one :meth:`~repro.launch.traffic.Continuation.step` at a time. The
+    single-request `serve()` path drives one continuation to completion; the
+    continuous-traffic harness (:class:`repro.launch.traffic.TrafficHarness`)
+    interleaves cycles of many.
+    """
 
-    mesh = _host_mesh()
-    with mesh:
-        params, _ = api.init_params(cfg, jax.random.PRNGKey(seed),
-                                    max_seq=max_seq)
-        prompts = jax.random.randint(jax.random.PRNGKey(seed + 1),
-                                     (batch, prompt_len), 0, cfg.vocab)
-        prefill_fn, decode_fn = _step_fns(arch, smoke, max_seq)
-        graph = _request_graph(cfg, params, batch, prompt_len, gen, max_seq,
-                               prefill_fn, decode_fn, step_energy=plan.e_total)
-        cycles = request_cycles(gen, plan.e_total, energy_budget,
-                                e_startup=planner.e_startup)
-        cost = CostModel(e_startup=planner.e_startup,
+    def __init__(self, arch: str, plan_table, smoke: bool = True) -> None:
+        from ..core.plan_table import PlanTableError
+        from .planner import as_planner
+
+        self.arch = arch
+        self.smoke = smoke
+        self.planner = as_planner(plan_table)
+        self.cfg = _resolve(arch, smoke)
+        if self.planner.table.arch != self.cfg.name:
+            raise PlanTableError(
+                f"plan table was built for {self.planner.table.arch!r} but "
+                f"this request is for {self.cfg.name!r}"
+            )
+        self._params: Dict[Any, Any] = {}
+        self._next_rid = 0
+
+    def _params_for(self, seed: int, max_seq: int):
+        key = (seed, max_seq)
+        if key not in self._params:
+            with _host_mesh():
+                params, _ = api.init_params(
+                    self.cfg, jax.random.PRNGKey(seed), max_seq=max_seq)
+            self._params[key] = params
+        return self._params[key]
+
+    def make_prompts(self, batch: int, prompt_len: int, seed: int = 0):
+        return jax.random.randint(jax.random.PRNGKey(seed + 1),
+                                  (batch, prompt_len), 0, self.cfg.vocab)
+
+    def open(self, batch: int, prompt_len: int, gen: int, *, seed: int = 0,
+             cycle_budget: Optional[float] = None, prompts=None, plan=None,
+             nvm=None, crash_hook=None) -> Continuation:
+        """Open one request as a steppable Continuation.
+
+        ``plan`` short-circuits the table lookup (the harness already looked
+        it up on the admission path — passing it back avoids double-counting
+        ``planner.stats``). External inputs are seeded only on a fresh NVM
+        (committed index 0), so reopening against a mid-request NVM resumes
+        rather than restarts — the crash-recovery contract.
+        """
+        from ..core import BurstRuntime, CostModel, LinearTransfer, Partition
+        from ..core.burst import burst_detail
+        from .planner import request_cycles
+
+        max_seq = prompt_len + gen
+        if plan is None:
+            plan = self.planner.plan_for(batch, max_seq, cycle_budget)
+        with _host_mesh():
+            params = self._params_for(seed, max_seq)
+            if prompts is None:
+                prompts = self.make_prompts(batch, prompt_len, seed)
+            prefill_fn, decode_fn = _step_fns(self.arch, self.smoke, max_seq,
+                                              donate=False)
+            graph = _request_graph(self.cfg, params, batch, prompt_len, gen,
+                                   max_seq, prefill_fn, decode_fn,
+                                   step_energy=plan.e_total)
+        cycles = request_cycles(gen, plan.e_total, cycle_budget,
+                                e_startup=self.planner.e_startup)
+        cost = CostModel(e_startup=self.planner.e_startup,
                          read=LinearTransfer(0.0, 0.0),
                          write=LinearTransfer(0.0, 0.0),
                          name="request-cycles")
         part = Partition(
-            cycles, [burst_detail(graph, cost, i, j) for (i, j) in cycles], None
+            cycles, [burst_detail(graph, cost, i, j) for (i, j) in cycles],
+            None,
         )
         rt = BurstRuntime(graph, part, nvm=nvm, cost=cost,
                           crash_hook=crash_hook)
-        t0 = time.time()
-        out = rt.run_to_completion({"prompts": np.asarray(prompts)})
-        dt = time.time() - t0
-        seqs = jnp.asarray(out["sequence"])
-        print(f"[serve] {arch}: planned batch={batch} "
-              f"prefill({prompt_len} tok)+{gen - 1} decode steps in "
-              f"{len(cycles)} energy cycles ({dt * 1e3:.1f} ms total); "
-              f"plan: {plan.summary()}")
-        print(f"[serve] first sequences: {np.asarray(seqs)[:2, :8]}")
-        if report is not None:
-            report.update(
-                plan=plan, cycles=list(cycles), runtime_stats=rt.stats,
-                planner_stats=dict(planner.stats), nvm=rt.nvm,
-            )
-        return seqs
+        if rt.nvm.read_index() == 0:
+            rt.seed_inputs({"prompts": np.asarray(prompts)})
+        rid = self._next_rid
+        self._next_rid += 1
+        req = Request(rid=rid, batch=batch, prompt_len=prompt_len, gen=gen,
+                      seed=seed)
+        return Continuation(request=req, plan=plan, cycles=list(cycles),
+                            runtime=rt, e_startup=self.planner.e_startup,
+                            scope=_host_mesh)
+
+    def warmup(self, shapes, cycle_budget: Optional[float] = None) -> None:
+        """Pre-compile: run one throwaway request per ``(batch, prompt_len,
+        gen, seed)`` shape so jit tracing happens outside any measured or
+        admission-controlled window."""
+        for (batch, prompt_len, gen, seed) in shapes:
+            cont = self.open(batch, prompt_len, gen, seed=seed,
+                             cycle_budget=cycle_budget)
+            cont.run_to_completion()
+
+
+def _serve_planned(arch, batch, prompt_len, gen, smoke, seed,
+                   plan_table, energy_budget, nvm, crash_hook, report):
+    ex = PlannedExecutor(arch, plan_table, smoke=smoke)
+    cont = ex.open(batch, prompt_len, gen, seed=seed,
+                   cycle_budget=energy_budget, nvm=nvm, crash_hook=crash_hook)
+    t0 = time.time()
+    out = cont.run_to_completion()
+    dt = time.time() - t0
+    seqs = jnp.asarray(out)
+    print(f"[serve] {arch}: planned batch={batch} "
+          f"prefill({prompt_len} tok)+{gen - 1} decode steps in "
+          f"{len(cont.cycles)} energy cycles ({dt * 1e3:.1f} ms total); "
+          f"plan: {cont.plan.summary()}")
+    print(f"[serve] first sequences: {np.asarray(seqs)[:2, :8]}")
+    if report is not None:
+        report.update(
+            plan=cont.plan, cycles=list(cont.cycles),
+            runtime_stats=cont.runtime.stats,
+            planner_stats=dict(ex.planner.stats), nvm=cont.runtime.nvm,
+        )
+    return seqs
 
 
 def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool = True,
@@ -241,8 +328,6 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool = True,
 
     cfg = _resolve(arch, smoke)
     mesh = _host_mesh()
-    rules = rules_for(cfg.family)
-    cons = make_constrain(rules)
     max_seq = prompt_len + gen
 
     with mesh:
@@ -251,16 +336,15 @@ def serve(arch: str, batch: int, prompt_len: int, gen: int, smoke: bool = True,
                                      (batch, prompt_len), 0, cfg.vocab)
         pre_batch = _pre_batch(cfg, prompts)
 
+        # the same cached executables as the planned path (donate=True keeps
+        # the decode cache-donation fast path) — previously fresh
+        # jax.jit(lambda ...) wrappers here retraced on every call
+        prefill, decode = _step_fns(arch, smoke, max_seq, donate=True)
         t0 = time.time()
-        prefill = jax.jit(lambda p, b: api.prefill(cfg, p, b, max_seq,
-                                                   constrain=cons))
         logits, cache = prefill(params, pre_batch)
         tok = jnp.argmax(logits[:, -1, :], axis=-1)[:, None].astype(jnp.int32)
         t_pre = time.time() - t0
 
-        decode = jax.jit(
-            lambda p, c, t, pos: api.decode_step(cfg, p, c, t, pos, constrain=cons),
-            donate_argnums=(1,))
         out = [tok]
         t1 = time.time()
         for i in range(gen - 1):

@@ -39,6 +39,21 @@ def pytest_configure(config):
     )
 
 
+@pytest.fixture(autouse=True)
+def _reset_serving_counters():
+    """Zero the process-global serving counters after every test so test
+    ordering can't leak TRACE_COUNT / COMMIT_STATS between suites. Checks
+    ``sys.modules`` instead of importing, so pure-numpy tests never pay the
+    jax import just for the reset."""
+    yield
+    serve = sys.modules.get("repro.launch.serve")
+    if serve is not None:
+        serve.reset_trace_counts()
+    runtime = sys.modules.get("repro.core.runtime")
+    if runtime is not None:
+        runtime.reset_commit_stats()
+
+
 # -- shared plan-table fixtures ------------------------------------------------
 
 # The canonical smoke bucket set for plan-table suites (two seq buckets at

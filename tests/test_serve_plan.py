@@ -130,3 +130,23 @@ def test_crash_mid_request_resumes_from_committed_cycle(tables, plain_tokens):
 def test_table_arch_mismatch_raises(tables):
     with pytest.raises(PlanTableError):
         serve(ARCHS[1], BATCH, PROMPT, GEN, plan_table=tables[ARCHS[0]])
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_unplanned_requests_add_zero_retraces(arch, plain_tokens):
+    # regression: the unplanned path used to rebuild jax.jit(lambda ...)
+    # wrappers per call, retracing every repeated same-shape request; it now
+    # routes through the cached _step_fns (donate=True fast path)
+    first = serve(arch, BATCH, PROMPT, GEN)
+    traces = dict(serve_mod.TRACE_COUNT)
+    for _ in range(2):
+        again = serve(arch, BATCH, PROMPT, GEN)
+        np.testing.assert_array_equal(np.asarray(first), np.asarray(again))
+    assert dict(serve_mod.TRACE_COUNT) == traces, "unplanned path re-traced"
+    np.testing.assert_array_equal(plain_tokens[arch], np.asarray(first))
+
+
+def test_reset_trace_counts_zeroes_counters():
+    serve_mod.TRACE_COUNT["prefill"] += 1  # simulate leaked state
+    serve_mod.reset_trace_counts()
+    assert serve_mod.TRACE_COUNT == {"prefill": 0, "decode": 0}
