@@ -43,6 +43,7 @@ from typing import Any, Dict, List, Optional, Sequence, Tuple, Union
 
 import numpy as np
 
+from ..obs.trace import PID_SOLVER, TRACER
 from .cost import CostModel
 from .graph import (
     GraphArrays,
@@ -842,12 +843,22 @@ class Engine:
             batched=spec.batched,
             backend="auto" if "+" in label else per_graph[0],
         )
-        if "+" in label:
-            # mixed auto batch: the jit dispatcher groups per backend,
-            # exactly like the legacy batched entry point did
-            payload = _JitBackend().solve(req)
-        else:
-            payload = backend_info(label, self._registry).factory().solve(req)
+        with TRACER.span(
+            "engine.solve",
+            cat="engine",
+            pid=PID_SOLVER,
+            objective=spec.objective,
+            backend=label,
+            graphs=len(graphs),
+            q_points=len(spec.q_values),
+        ):
+            with TRACER.span("engine.dispatch", cat="engine", pid=PID_SOLVER, backend=label):
+                if "+" in label:
+                    # mixed auto batch: the jit dispatcher groups per backend,
+                    # exactly like the legacy batched entry point did
+                    payload = _JitBackend().solve(req)
+                else:
+                    payload = backend_info(label, self._registry).factory().solve(req)
         return Solution(
             spec=spec,
             backend=label,

@@ -76,6 +76,7 @@ import jax.numpy as jnp
 from jax import lax
 from jax.experimental import enable_x64
 
+from ..obs.metrics import METRICS
 from ._cache import weak_id_cache
 from ._deprecation import warn_legacy
 from .cost import CostModel, cost_scalars
@@ -119,20 +120,26 @@ _UNROLL_MAX = 8
 _AUTO_DENSE_BYTES = 32 << 20
 
 # Trace-count regression hooks (incremented at trace time only; see the
-# no-retrace test in tests/test_partition_sweep.py).
-TRACE_COUNT = {"dp_sweep": 0, "qmin_sweep": 0, "exactk_sweep": 0}
+# no-retrace test in tests/test_partition_sweep.py). Registry-backed
+# (repro.obs.metrics) but still plain dicts to consumers.
+TRACE_COUNT = METRICS.counter_dict(
+    "partition_jax.trace_count", ("dp_sweep", "qmin_sweep", "exactk_sweep")
+)
 
 # Host-side solve counters (incremented per engine entry, cached or not):
 # the plan-table serving tests pin "zero partitioner solves on the request
 # path" against these, and the DSE tests pin "extending an untouched table
 # never re-solves existing cells".
-SOLVE_COUNT = {
-    "sweep_jax": 0,
-    "sweep_jax_batched": 0,
-    "sweep_jax_sharded": 0,
-    "q_min_scan": 0,
-    "optimal_k_scan": 0,
-}
+SOLVE_COUNT = METRICS.counter_dict(
+    "partition_jax.solve_count",
+    (
+        "sweep_jax",
+        "sweep_jax_batched",
+        "sweep_jax_sharded",
+        "q_min_scan",
+        "optimal_k_scan",
+    ),
+)
 
 
 # ---------------------------------------------------------------------------

@@ -66,6 +66,8 @@ from typing import Dict, List, Optional, Sequence, Tuple, Union
 import numpy as np
 
 from ..configs.base import ModelConfig
+from ..obs.metrics import METRICS
+from ..obs.trace import PID_SOLVER, TRACER
 from ._deprecation import warn_legacy
 from .burst import burst_cost
 from .cost import CostModel, cost_scalars
@@ -94,7 +96,10 @@ PLAN_TABLE_VERSION = 2
 
 # Offline-build observability (tests assert the fingerprint cache short-
 # circuits the solve and that extensions never rebuild existing cells).
-BUILD_STATS = {"built": 0, "cache_hits": 0, "extended": 0}
+# Registry-backed (repro.obs.metrics) but still a plain dict to consumers.
+BUILD_STATS = METRICS.counter_dict(
+    "plan_table.build_stats", ("built", "cache_hits", "extended")
+)
 
 
 class PlanTableError(ValueError):
@@ -406,6 +411,14 @@ class PlanTable:
         """O(1) request-path query: bucket the shape, pick the Q, return the
         precomputed plan. Raises :class:`UnknownBucketError` for untabulated
         shapes and :class:`Infeasible` for budgets below the grid."""
+        if TRACER.enabled:  # guarded: keep the disabled hot path span-free
+            with TRACER.span(
+                "plan_table.lookup", cat="plan_table", pid=PID_SOLVER,
+                batch=batch, seq=seq,
+            ):
+                return self.plan_at(
+                    self.bucket_index(batch, seq), self.q_index(energy_budget)
+                )
         return self.plan_at(
             self.bucket_index(batch, seq), self.q_index(energy_budget)
         )
@@ -705,14 +718,20 @@ def _build_table(
         BUILD_STATS["cache_hits"] += 1
         return cached
 
-    if graphs is None:
-        graphs = [lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets]
-    sweeps = _facade_sweeps(graphs, cm, qs, backend, sharding)
-    table = _finish_table(
-        cfg, kind, cm, fp, backend, buckets, qs,
-        [g.n_tasks for g in graphs], _block_from_sweeps(graphs, cm, sweeps),
-        lineage=[fp],
-    )
+    with TRACER.span(
+        "plan_table.build", cat="plan_table", pid=PID_SOLVER,
+        cfg=cfg.name, buckets=len(buckets), q_points=len(qs),
+    ):
+        if graphs is None:
+            graphs = [
+                lower_config(cfg, batch=b, seq=s, kind=kind) for (b, s) in buckets
+            ]
+        sweeps = _facade_sweeps(graphs, cm, qs, backend, sharding)
+        table = _finish_table(
+            cfg, kind, cm, fp, backend, buckets, qs,
+            [g.n_tasks for g in graphs], _block_from_sweeps(graphs, cm, sweeps),
+            lineage=[fp],
+        )
     BUILD_STATS["built"] += 1
     if cache_path is not None:
         table.save(cache_path)
@@ -874,7 +893,13 @@ def extend_plan_table(
     )
 
     def _solve(graphs, qs):
-        return _facade_sweeps(graphs, cm, qs, backend, sharding)
+        # One span per engine call the extension actually makes (new-bucket
+        # block and/or new-Q block); an untouched extend emits none.
+        with TRACER.span(
+            "plan_table.extend", cat="plan_table", pid=PID_SOLVER,
+            graphs=len(graphs), q_points=len(qs),
+        ):
+            return _facade_sweeps(graphs, cm, qs, backend, sharding)
 
     new_buckets = sorted(new_buckets)
     new_b_index = {b: i for i, b in enumerate(new_buckets)}

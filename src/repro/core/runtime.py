@@ -31,6 +31,8 @@ import pickle
 import tempfile
 from typing import Any, Callable, Dict, Mapping, Optional, Set, Tuple
 
+from ..obs.metrics import METRICS
+from ..obs.trace import PID_RUNTIME, TRACER
 from .burst import burst_detail
 from .cost import CostModel
 from .graph import TaskGraph
@@ -52,15 +54,16 @@ __all__ = [
 # replayed burst (a re-run of an index whose first attempt lost power before
 # the commit) counts here, across all BurstRuntime instances. Consumers must
 # snapshot-and-diff rather than read absolutes — see reset_commit_stats().
-COMMIT_STATS = {"commits": 0, "replays": 0}
+# Registry-backed (repro.obs.metrics) but still a plain dict to consumers.
+COMMIT_STATS = METRICS.counter_dict("runtime.commit_stats", ("commits", "replays"))
 
 
 def reset_commit_stats() -> None:
     """Zero the process-global commit counters (test isolation). This resets
     the *counters* only; NVM state and per-runtime ExecutionStats are
-    untouched."""
-    for k in COMMIT_STATS:
-        COMMIT_STATS[k] = 0
+    untouched. Thin alias for the registry reset; one
+    ``repro.obs.metrics.reset_all()`` covers this and every other counter."""
+    COMMIT_STATS.reset()
 
 
 class PowerFailure(RuntimeError):
@@ -176,6 +179,21 @@ class BurstRuntime:
     # -- one burst = one "energy quantum" --------------------------------------
 
     def _run_burst(self, b: int) -> None:
+        # Tracing wrapper: one span per energy cycle on the runtime track,
+        # with PowerFailure surfaced as an instant. Guarded on the enabled
+        # flag so the disabled hot path pays one attribute check.
+        if not TRACER.enabled:
+            return self._run_burst_impl(b)
+        with TRACER.span(
+            "burst", cat="runtime", pid=PID_RUNTIME, index=b, replay=b in self._attempted
+        ):
+            try:
+                self._run_burst_impl(b)
+            except PowerFailure:
+                TRACER.instant("power_failure", cat="runtime", pid=PID_RUNTIME, index=b)
+                raise
+
+    def _run_burst_impl(self, b: int) -> None:
         i, j = self.partition.bounds[b]
         g = self.graph
         detail = self.partition.bursts[b]
@@ -183,6 +201,8 @@ class BurstRuntime:
         if b in self._attempted:  # a prior attempt lost power before commit
             self.stats.replays += 1
             COMMIT_STATS["replays"] += 1
+            if TRACER.enabled:
+                TRACER.instant("replay", cat="runtime", pid=PID_RUNTIME, index=b)
         self._attempted.add(b)
 
         # DMA in: dependency-optimized load set
@@ -218,6 +238,8 @@ class BurstRuntime:
         self.nvm.commit_index(b + 1)
         self.stats.bursts_run += 1
         COMMIT_STATS["commits"] += 1
+        if TRACER.enabled:
+            TRACER.instant("nvm_commit", cat="runtime", pid=PID_RUNTIME, index=b)
         if self.cost is not None:
             self.stats.energy += detail.total
         if self.on_commit is not None:

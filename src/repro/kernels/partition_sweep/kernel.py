@@ -44,10 +44,13 @@ from jax import lax
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from ...obs.metrics import METRICS
+
 # Trace-count regression hook: incremented at trace time only, so tests can
 # assert that serving-style loops re-dispatch the cached kernel instead of
 # re-tracing (see the enable_x64-hoist note in repro/core/partition_jax.py).
-TRACE_COUNT = {"sweep_columns": 0}
+# Registry-backed (repro.obs.metrics) but still a plain dict to consumers.
+TRACE_COUNT = METRICS.counter_dict("kernel.partition_sweep.trace_count", ("sweep_columns",))
 
 
 def _sweep_kernel(

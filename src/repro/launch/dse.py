@@ -40,6 +40,8 @@ import time
 from typing import List, Optional, Sequence, Tuple, Union
 
 from ..api import QGridSharding
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACER
 from ..core.plan_table import (
     PlanTable,
     build_plan_table,
@@ -156,7 +158,14 @@ def main(argv=None) -> int:
     ap.add_argument("--out", required=True, help="table .npz path")
     ap.add_argument("--full", action="store_true",
                     help="use the full config instead of the smoke config")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON (Perfetto-loadable) "
+                         "of the build/extend/probe")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        TRACER.configure(enabled=True)
 
     import jax
 
@@ -167,11 +176,20 @@ def main(argv=None) -> int:
         if args.kind is not None or args.q_points is not None:
             ap.error("--kind/--q-points are fixed by the existing table; "
                      "not valid with --extend/--probe-only")
+    def _flush_telemetry() -> None:
+        if args.trace_out:
+            n_ev = TRACER.write(args.trace_out)
+            print(f"[dse] wrote {n_ev} trace events to {args.trace_out}")
+        if args.metrics_out:
+            METRICS.dump_json(args.metrics_out, tool="dse", arch=args.arch)
+            print(f"[dse] wrote metrics snapshot to {args.metrics_out}")
+
     if args.probe_only:
         n = probe_table(args.out, args.arch, k=args.probe or None,
                         seed=args.seed, smoke=smoke)
         print(f"[dse] probe: {n} cells of {args.out} re-validated against "
               f"the live engine — clean")
+        _flush_telemetry()
         return 0
     t0 = time.time()
     if args.extend:
@@ -201,6 +219,7 @@ def main(argv=None) -> int:
                         smoke=smoke)
         print(f"[dse]   probe:   {n} cells re-validated against the live "
               f"engine — clean")
+    _flush_telemetry()
     return 0
 
 

@@ -39,6 +39,8 @@ import numpy as np
 
 from ..configs import resolve_config
 from ..models import api
+from ..obs.metrics import METRICS
+from ..obs.trace import TRACER
 from ..models.sharding import rules_for
 from .mesh import make_host_mesh
 from .steps import make_constrain
@@ -47,16 +49,18 @@ from .traffic import Continuation, Request
 # Trace-time counters for the serving request path (incremented only when
 # XLA actually re-traces; the serving regression tests pin these at zero
 # across repeated planned *and* unplanned requests of the same shape).
-TRACE_COUNT = {"prefill": 0, "decode": 0}
+# Registry-backed (repro.obs.metrics) but still a plain dict in every way
+# existing consumers rely on.
+TRACE_COUNT = METRICS.counter_dict("serve.trace_count", ("prefill", "decode"))
 
 
 def reset_trace_counts() -> None:
     """Zero the process-global retrace counters (test isolation). The jit
     caches themselves are untouched — this resets observability, not
     compilation state. Consumers that can't rely on a reset (the traffic
-    harness) snapshot-and-diff instead of reading absolutes."""
-    for k in TRACE_COUNT:
-        TRACE_COUNT[k] = 0
+    harness) snapshot-and-diff instead of reading absolutes. Thin alias for
+    the registry reset; ``repro.obs.metrics.reset_all()`` covers it too."""
+    TRACE_COUNT.reset()
 
 
 @functools.lru_cache(maxsize=None)
@@ -374,10 +378,22 @@ def main(argv=None) -> int:
     ap.add_argument("--energy-budget", type=float, default=None,
                     help="per-cycle energy budget (units of the table's "
                          "cost model; default: unbounded)")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON (Perfetto-loadable)")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args(argv)
+    if args.trace_out:
+        TRACER.configure(enabled=True)
     serve(args.arch, args.batch, args.prompt_len, args.gen,
           smoke=not args.full, plan_table=args.plan_table,
           energy_budget=args.energy_budget)
+    if args.trace_out:
+        n_events = TRACER.write(args.trace_out)
+        print(f"[serve] wrote {n_events} trace events to {args.trace_out}")
+    if args.metrics_out:
+        METRICS.dump_json(args.metrics_out, tool="serve", arch=args.arch)
+        print(f"[serve] wrote metrics snapshot to {args.metrics_out}")
     return 0
 
 

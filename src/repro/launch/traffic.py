@@ -64,8 +64,24 @@ from typing import (
 
 import numpy as np
 
-from ..core.partition import within_budget
+from ..core.partition import BUDGET_ABS, BUDGET_REL, within_budget
 from ..core.runtime import COMMIT_STATS, PowerFailure
+from ..obs.ledger import EnergyLedger
+from ..obs.log import enable_cli_output, get_emitter
+from ..obs.metrics import METRICS
+from ..obs.trace import (
+    PID_RUNTIME,
+    PID_SOLVER,
+    PID_TRAFFIC,
+    TID_HARVEST,
+    TID_SCHEDULER,
+    TRACER,
+    request_tid,
+)
+
+# Structured progress reporting: silent under pytest / library use (no
+# handler), "[traffic] ..." on stdout under the CLI (enable_cli_output).
+_LOG = get_emitter("repro.traffic")
 
 __all__ = [
     "Request",
@@ -369,6 +385,13 @@ class TrafficReport:
     energy_harvested: float = 0.0
     final_charge: float = 0.0
     tokens: Dict[int, Any] = dataclasses.field(default_factory=dict)
+    # Energy-ledger attribution (repro.obs.ledger): restore/compute/commit
+    # charged against the admission reservation, replay as overhead on top.
+    energy_ledger: Dict[str, float] = dataclasses.field(default_factory=dict)
+    ledger_conserved: Optional[bool] = None
+    ledger_conservation_error: float = 0.0
+    ledger_overhead_fraction: float = 0.0
+    ledger: Optional[Any] = dataclasses.field(default=None, repr=False)
 
     @property
     def requests_per_s(self) -> float:
@@ -400,7 +423,10 @@ class TrafficReport:
             f"{self.cycles_run} cycles ({self.power_failures} power "
             f"failures, {self.commit_delta.get('replays', 0)} replays) | "
             f"plan-cache hit rate {self.hit_rate:.3f} | "
-            f"retraces {self.retraces}"
+            f"retraces {self.retraces} | "
+            f"energy {self.energy_spent:.4g} spent "
+            f"(replay overhead {self.ledger_overhead_fraction:.2%}, "
+            f"ledger {'conserved' if self.ledger_conserved else 'IMBALANCED'})"
         )
 
 
@@ -518,8 +544,16 @@ class TrafficHarness:
 
     async def _run_async(self, requests: List[Request]) -> TrafficReport:
         report = TrafficReport()
+        ledger = EnergyLedger()
+        report.ledger = ledger
         self._feed_done = not requests
         clock = _VirtualClock()
+        if TRACER.enabled:
+            TRACER.set_process(PID_TRAFFIC, "traffic")
+            TRACER.set_thread(PID_TRAFFIC, TID_SCHEDULER, "scheduler")
+            TRACER.set_thread(PID_TRAFFIC, TID_HARVEST, "harvest")
+            TRACER.set_process(PID_SOLVER, "solver/plan-table")
+            TRACER.set_process(PID_RUNTIME, "burst runtime")
         queue: "asyncio.Queue[Request]" = asyncio.Queue()
         deferred: deque[_Pending] = deque()
         ever_deferred: set = set()
@@ -537,6 +571,20 @@ class TrafficHarness:
 
         def event(kind: str, rid: int) -> None:
             report.events.append((clock.now, kind, rid))
+            if TRACER.enabled:
+                # each request gets its own Perfetto track; lifecycle events
+                # land on it as instants carrying the virtual timestamp
+                TRACER.set_thread(PID_TRAFFIC, request_tid(rid), f"request {rid}")
+                TRACER.instant(
+                    kind, cat="traffic", tid=request_tid(rid), rid=rid, vt=clock.now
+                )
+
+        def sample_harvest() -> None:
+            if TRACER.enabled and np.isfinite(self.harvest.charge):
+                TRACER.counter(
+                    "harvest_charge", {"charge": self.harvest.charge},
+                    tid=TID_HARVEST,
+                )
 
         def reject(pend: _Pending, reason: str) -> None:
             report.rejected += 1
@@ -548,6 +596,7 @@ class TrafficHarness:
         def open_admitted(pend: _Pending) -> None:
             r = pend.request
             self.harvest.draw(pend.energy)
+            sample_harvest()
             cont = self.executor.open(
                 r.batch, r.prompt_len, r.gen, seed=r.seed,
                 cycle_budget=self.cycle_budget, plan=pend.plan,
@@ -638,17 +687,39 @@ class TrafficHarness:
 
         def execute(cont: Continuation) -> None:
             nonlocal last_key
+            rid = cont.request.rid
+            c = cont.cycles_done  # index of the cycle this visit will run
             if last_key is not None and cont.bucket_key != last_key:
                 report.executable_switches += 1
+                if TRACER.enabled:
+                    TRACER.instant(
+                        "executable_switch", cat="traffic", tid=TID_SCHEDULER,
+                        bucket=str(cont.bucket_key), vt=clock.now,
+                    )
             last_key = cont.bucket_key
             grp = groups[cont.bucket_key]
             try:
-                done = cont.step()
+                if TRACER.enabled:
+                    with TRACER.span(
+                        "cycle", cat="traffic", tid=request_tid(rid),
+                        rid=rid, cycle=c, vt=clock.now,
+                    ):
+                        done = cont.step()
+                else:
+                    done = cont.step()
             except PowerFailure:
                 report.power_failures += 1
-                event("power_failure", cont.request.rid)
+                # the crashed attempt's energy was never reserved by
+                # admission: book it as replay overhead, not a charge
+                ledger.overhead(rid, c, cont.cycle_cost(c), vt=clock.now)
+                event("power_failure", rid)
                 return  # committed index intact; replay on the next visit
             report.cycles_run += 1
+            restore, compute, commit = self._attribute_cycle(cont, c)
+            ledger.charge(
+                rid, c, restore=restore, compute=compute, commit=commit,
+                vt=clock.now,
+            )
             if done:
                 grp.popleft()
                 pend = open_meta.pop(cont.request.rid)
@@ -676,6 +747,7 @@ class TrafficHarness:
                     execute(cont)
                     dt = self.service_time
                     self.harvest.replenish(dt)
+                    sample_harvest()
                     clock.advance_to(clock.now + dt)
                     continue
                 # idle: jump to the next event (arrival / deferred-ready /
@@ -700,6 +772,7 @@ class TrafficHarness:
                     continue
                 t = min(horizons)
                 self.harvest.replenish(t - clock.now)
+                sample_harvest()
                 clock.advance_to(t)
         finally:
             feeder.cancel()
@@ -719,7 +792,38 @@ class TrafficHarness:
         if not np.isfinite(report.final_charge):
             report.final_charge = float("inf")
         _ = charge0  # baseline kept for debugging hooks
+        # Energy-ledger closure: every admitted request drained, so the
+        # charged categories must reproduce the pool delta exactly (at
+        # solver tolerance); replay overhead sits outside the reservation.
+        report.energy_ledger = ledger.by_category()
+        report.ledger_overhead_fraction = ledger.overhead_fraction()
+        report.ledger_conservation_error = ledger.conservation_error(
+            report.energy_spent)
+        report.ledger_conserved = ledger.conserves(report.energy_spent)
         return report
+
+    @staticmethod
+    def _attribute_cycle(cont: Continuation, c: int) -> Tuple[float, float, float]:
+        """Split cycle ``c``'s tabulated cost into (restore, compute, commit).
+
+        Preferred source is the runtime partition's own
+        :class:`~repro.core.burst.BurstDetail` — it separates E_s, task
+        energy, and NVM transfer traffic — but only when its total agrees
+        with the admission-path :meth:`Continuation.cycle_cost` (the quantity
+        the harvest pool actually drew), so ledger conservation holds by
+        construction. Executors whose runtime prices cycles differently fall
+        back to the admission decomposition with commit folded into zero.
+        """
+        total = cont.cycle_cost(c)
+        try:
+            d = cont.runtime.partition.bursts[c]
+        except Exception:
+            d = None
+        if d is not None:
+            dt = float(d.total)
+            if abs(dt - total) <= max(abs(dt), abs(total)) * BUDGET_REL + BUDGET_ABS:
+                return float(d.e_startup), float(d.e_task), float(d.e_read + d.e_write)
+        return float(cont.e_startup), float(total - cont.e_startup), 0.0
 
     # -- snapshots (diffs, never absolutes) --------------------------------
 
@@ -825,7 +929,18 @@ def main(argv=None) -> int:
                     help="exit nonzero unless >= this many deferred")
     ap.add_argument("--expect-zero-retrace", action="store_true",
                     help="exit nonzero on any post-warmup jit retrace")
+    ap.add_argument("--trace-out", default=None,
+                    help="write a Chrome trace_event JSON (Perfetto-loadable) "
+                         "of the run; also gates on ledger conservation")
+    ap.add_argument("--metrics-out", default=None,
+                    help="write the metrics-registry snapshot as JSON")
     args = ap.parse_args(argv)
+
+    # CLI runs report through the structured emitter on stdout; library and
+    # pytest use stay silent (no handler attached).
+    enable_cli_output("repro.traffic", tag="traffic")
+    if args.trace_out:
+        TRACER.configure(enabled=True)
 
     # jax-heavy imports stay here so `--help` and the pure-python pieces
     # (arrival processes, HarvestModel) never pay for them
@@ -838,7 +953,7 @@ def main(argv=None) -> int:
         table = build_table_for_arch(args.arch, buckets, n_q=8,
                                      smoke=not args.full)
         planner = ServePlanner(table)
-        print(f"[traffic] built {table.summary()}")
+        _LOG.emit(f"built {table.summary()}")
     else:
         planner = ServePlanner.from_file(args.plan_table)
     executor = PlannedExecutor(args.arch, planner, smoke=not args.full)
@@ -864,8 +979,9 @@ def main(argv=None) -> int:
             capacity = args.capacity_requests * e_req
         if args.rate_requests is not None:
             rate = args.rate_requests * e_req
-        print(f"[traffic] one {b}x{p}x{g} request draws {e_req:.6g}; "
-              f"capacity={capacity:.6g} rate={rate:.6g}")
+        _LOG.emit(f"one {b}x{p}x{g} request draws {e_req:.6g}; "
+                  f"capacity={capacity:.6g} rate={rate:.6g}",
+                  e_req=e_req, capacity=capacity, rate=rate)
     harvest = (HarvestModel(capacity=capacity, rate=rate)
                if capacity is not None else None)
 
@@ -874,11 +990,29 @@ def main(argv=None) -> int:
                              service_time=args.service_time)
     if not args.no_warmup:
         n_warm = harness.warmup(requests)
-        print(f"[traffic] warmed {n_warm} shape(s)")
+        _LOG.emit(f"warmed {n_warm} shape(s)", warmed=n_warm)
     report = harness.run(requests)
-    print(f"[traffic] {report.summary()}")
+    _LOG.emit(report.summary())
+    _LOG.emit(
+        "energy ledger: " + ", ".join(
+            f"{k}={v:.6g}" for k, v in report.energy_ledger.items()),
+        **report.energy_ledger,
+    )
+
+    if args.trace_out:
+        n_events = TRACER.write(args.trace_out)
+        _LOG.emit(f"wrote {n_events} trace events to {args.trace_out}",
+                  events=n_events, path=args.trace_out)
+    if args.metrics_out:
+        METRICS.dump_json(args.metrics_out, tool="traffic", arch=args.arch)
+        _LOG.emit(f"wrote metrics snapshot to {args.metrics_out}",
+                  path=args.metrics_out)
 
     failures = []
+    if report.ledger_conserved is False:
+        failures.append(
+            f"energy ledger imbalance {report.ledger_conservation_error:.3e} "
+            f"vs pool delta {report.energy_spent:.6g}")
     if (args.expect_admitted is not None
             and report.admitted < args.expect_admitted):
         failures.append(f"admitted {report.admitted} < "
@@ -890,7 +1024,7 @@ def main(argv=None) -> int:
     if args.expect_zero_retrace and report.retraces:
         failures.append(f"retraces {report.trace_delta} != 0 after warmup")
     if failures:
-        print(f"[traffic] FAILED: {'; '.join(failures)}")
+        _LOG.emit(f"FAILED: {'; '.join(failures)}")
         return 1
     return 0
 

@@ -41,17 +41,20 @@ def pytest_configure(config):
 
 @pytest.fixture(autouse=True)
 def _reset_serving_counters():
-    """Zero the process-global serving counters after every test so test
-    ordering can't leak TRACE_COUNT / COMMIT_STATS between suites. Checks
-    ``sys.modules`` instead of importing, so pure-numpy tests never pay the
-    jax import just for the reset."""
+    """Zero every process-global counter after each test so test ordering
+    can't leak TRACE_COUNT / SOLVE_COUNT / COMMIT_STATS / BUILD_STATS between
+    suites. All counter dicts register with the repro.obs metrics registry at
+    module import, so one ``reset_all()`` covers whatever subset this test
+    actually imported — and repro.obs itself is stdlib-only, so pure-numpy
+    tests never pay the jax import just for the reset. The tracer is
+    disarmed too, so a test that enabled tracing can't leak spans."""
     yield
-    serve = sys.modules.get("repro.launch.serve")
-    if serve is not None:
-        serve.reset_trace_counts()
-    runtime = sys.modules.get("repro.core.runtime")
-    if runtime is not None:
-        runtime.reset_commit_stats()
+    from repro.obs.metrics import reset_all
+    from repro.obs.trace import TRACER
+
+    reset_all()
+    if TRACER.enabled or TRACER.events():
+        TRACER.reset()
 
 
 # -- shared plan-table fixtures ------------------------------------------------
