@@ -840,6 +840,102 @@ def telemetry_overhead(smoke=False, json_out=None):
         raise SystemExit("telemetry_overhead: " + "; ".join(failures))
 
 
+def calibration_bench(smoke=False, json_out=None):
+    """Calibration-loop cost and contract gates (core/calibration.py).
+
+    * ledger → MeasuredCostTable ingest pace (Welford accumulation) and
+      fingerprint time;
+    * the sigma=0 contract, as a hard gate: a table whose samples match
+      the analytical model must materialize the analytical CostModel
+      *object* and sweep bit-identically through the engine;
+    * confidence pricing overhead: E_total at confidence 0.95 over the
+      mean-priced E_total on the qwen3-4b smoke graph — must be >= 1
+      (pricing is pessimistic, never optimistic).
+
+    Rows merge into BENCH_serving.json.
+    """
+    import random
+
+    from repro.api import PartitionSpec, solve
+    from repro.core import lower_config
+    from repro.core.calibration import MeasuredCostTable
+    from repro.core.layer_profile import analytical_cost_model
+    from repro.obs.ledger import EnergyLedger
+    from repro.configs import SMOKE_CONFIGS
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_serving.json")
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    cm = analytical_cost_model("time")
+    rng = random.Random(0)
+    n_rows = 600 if smoke else 3000
+
+    led = EnergyLedger()
+    for i in range(n_rows // 3):
+        led.charge(i % 7, i // 7, restore=float(cm.e_startup),
+                   compute=rng.uniform(1e-5, 1e-4), commit=1e-6)
+    t0 = time.time()
+    clean = MeasuredCostTable.from_ledger(led, base=cm, kind="time")
+    t_ingest = time.time() - t0
+    row("calibration.ingest_rows", str(clean.n_samples), "ledger entries")
+    row("calibration.ingest_ms", f"{t_ingest * 1e3:.2f}",
+        f"{clean.n_samples / max(t_ingest, 1e-9):.0f} rows/s Welford")
+    t0 = time.time()
+    fp = clean.fingerprint()
+    row("calibration.fingerprint_us", f"{(time.time() - t0) * 1e6:.0f}",
+        f"sha256 {fp[:12]}…")
+
+    # sigma=0 gate: identical-object materialization + bitwise sweep
+    g = lower_config(SMOKE_CONFIGS["qwen3-4b"], batch=2, seq=16, kind="time")
+    qs = (5e-5, None)
+    base_sweep = solve(PartitionSpec(graph=g, cost=cm, q_grid=qs,
+                                     backend="scan")).sweep
+    meas_sweep = solve(PartitionSpec(graph=g, cost=clean, q_grid=qs,
+                                     backend="scan")).sweep
+    identical = clean.cost_model() is cm and all(
+        getattr(base_sweep, f).tobytes() == getattr(meas_sweep, f).tobytes()
+        for f in ("dp", "parent", "e_total", "feasible", "starts"))
+    row("calibration.sigma0_bit_identical", str(int(identical)),
+        "clean table materializes the analytical model; acceptance: ==1")
+
+    # confidence overhead on a noisy profile
+    noisy = MeasuredCostTable(cm, "time")
+    for _ in range(200):
+        noisy.add("restore", rng.gauss(float(cm.e_startup) * 2, float(cm.e_startup) * 0.5))
+        noisy.add("commit", abs(rng.gauss(1e-6, 3e-7)))
+    t0 = time.time()
+    e_mean = float(solve(PartitionSpec(
+        graph=g, cost=noisy, q_grid=(None,), backend="scan")).sweep.e_total[0])
+    e_conf = float(solve(PartitionSpec(
+        graph=g, cost=noisy, q_grid=(None,), confidence=0.95,
+        backend="scan")).sweep.e_total[0])
+    t_solve = time.time() - t0
+    ratio = e_conf / e_mean
+    row("calibration.confidence_overhead_ratio", f"{ratio:.4f}",
+        "E_total@0.95 / E_total@mean on qwen3-4b smoke; acceptance: >=1")
+    row("calibration.confident_solve_ms", f"{t_solve / 2 * 1e3:.1f}",
+        "mean of the two priced solves above")
+
+    _merge_bench_json(path, records, calibration_smoke=bool(smoke))
+
+    failures = []
+    if not identical:
+        failures.append(
+            "sigma=0 table does not reproduce the analytical sweep "
+            "bit-for-bit — the measured path is recomputing, not slotting in")
+    if ratio < 1.0:
+        failures.append(
+            f"confidence pricing lowered E_total ({ratio:.4f} < 1) — "
+            f"mean + z*sigma must never be optimistic")
+    if failures:
+        raise SystemExit("calibration: " + "; ".join(failures))
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -919,6 +1015,7 @@ SECTIONS = {
     "api_facade": api_facade,
     "serving_traffic": serving_traffic,
     "telemetry_overhead": telemetry_overhead,
+    "calibration": calibration_bench,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -945,7 +1042,7 @@ def main(argv=None) -> None:
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
         elif name in ("plan_table", "plan_table_sharded", "api_facade",
-                      "serving_traffic", "telemetry_overhead"):
+                      "serving_traffic", "telemetry_overhead", "calibration"):
             fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()

@@ -41,6 +41,13 @@ and address it with ``PartitionSpec(backend="mine")``.
 from __future__ import annotations
 
 from .core._deprecation import JulienningDeprecationWarning
+from .core.calibration import (
+    CalibrationError,
+    MeasuredCostTable,
+    clear_measured_defaults,
+    install_measured_default,
+    use_measured,
+)
 from .core.engine import (
     OBJECTIVES,
     BackendInfo,
@@ -63,11 +70,13 @@ from .core.partition import Infeasible
 __all__ = [
     "OBJECTIVES",
     "BackendInfo",
+    "CalibrationError",
     "Engine",
     "EngineError",
     "ExportMismatch",
     "Infeasible",
     "JulienningDeprecationWarning",
+    "MeasuredCostTable",
     "PartitionSpec",
     "QGridSharding",
     "Solution",
@@ -75,10 +84,13 @@ __all__ = [
     "UnsupportedObjective",
     "backend_info",
     "backend_names",
+    "clear_measured_defaults",
     "default_engine",
     "export_kind",
+    "install_measured_default",
     "register_backend",
     "solve",
+    "use_measured",
 ]
 
 

@@ -351,9 +351,14 @@ class PartitionSpec:
     combine: ``"sum"`` for E_total, ``"max"`` for the pipeline bottleneck).
 
     ``cost`` is required for explicit graphs; config-lowered specs default it
-    per ``kind`` exactly like the plan-table builders. ``backend`` names a
-    registered backend or ``"auto"``; ``sharding`` spreads the Q grid over a
-    device mesh; ``interpret`` is forwarded to the Pallas kernel.
+    per ``kind`` exactly like the plan-table builders. ``cost`` also accepts
+    a :class:`repro.core.calibration.MeasuredCostTable`, in which case
+    ``confidence`` (a level in (0, 1)) prices every cut at measured
+    mean + z·sigma; ``confidence=None`` prices at the plain mean, which is
+    bit-identical to the analytical model when the measurements match it.
+    ``backend`` names a registered backend or ``"auto"``; ``sharding``
+    spreads the Q grid over a device mesh; ``interpret`` is forwarded to the
+    Pallas kernel.
     """
 
     graph: Optional[AnyExport] = None
@@ -371,6 +376,7 @@ class PartitionSpec:
     backend: str = "auto"
     sharding: Optional[QGridSharding] = None
     interpret: Optional[bool] = None
+    confidence: Optional[float] = None
 
     def __post_init__(self):
         sources = [
@@ -439,6 +445,28 @@ class PartitionSpec:
                 )
         if not isinstance(self.backend, str):
             raise SpecError(f"backend= must be a name, got {self.backend!r}")
+        if self.cost is not None and not (
+            isinstance(self.cost, CostModel) or hasattr(self.cost, "cost_model")
+        ):
+            raise SpecError(
+                f"cost= must be a CostModel or a calibrated "
+                f"MeasuredCostTable (anything with .cost_model(confidence)), "
+                f"got {type(self.cost).__name__}"
+            )
+        if self.confidence is not None:
+            try:
+                c = float(self.confidence)
+            except (TypeError, ValueError):
+                raise SpecError(
+                    f"confidence= must be a float in (0, 1), got "
+                    f"{self.confidence!r}"
+                ) from None
+            if not 0.0 < c < 1.0 or c != c:
+                raise SpecError(
+                    f"confidence= must lie strictly in (0, 1), got "
+                    f"{self.confidence!r}"
+                )
+            object.__setattr__(self, "confidence", c)
 
     # -- normalized views ---------------------------------------------------
 
@@ -746,11 +774,35 @@ class Engine:
 
     # -- resolution ---------------------------------------------------------
 
+    @staticmethod
+    def _price_cost(spec: PartitionSpec, cost) -> CostModel:
+        """Materialize the spec's priced CostModel.
+
+        A calibrated source (anything with ``.cost_model(confidence)``, i.e.
+        a :class:`repro.core.calibration.MeasuredCostTable` — duck-typed to
+        keep the import lazy) is priced at ``spec.confidence``: each cut
+        costs measured mean + z·sigma. A plain CostModel passes through —
+        and combining it with ``confidence=`` is a typed error, because a
+        datasheet model has no variance to price and the flag would
+        silently do nothing.
+        """
+        if not isinstance(cost, CostModel) and hasattr(cost, "cost_model"):
+            return cost.cost_model(spec.confidence)
+        if spec.confidence is not None:
+            raise SpecError(
+                f"confidence= prices measured uncertainty and needs cost= "
+                f"to be a MeasuredCostTable (repro.core.calibration); a "
+                f"plain CostModel ({getattr(cost, 'name', cost)!r}) has no "
+                f"variance to price"
+            )
+        return cost
+
     def _resolve_graphs(
         self, spec: PartitionSpec
     ) -> Tuple[Tuple[AnyExport, ...], CostModel]:
         if spec.config is not None:
             from ..configs import resolve_config
+            from .calibration import measured_default
             from .layer_profile import default_cost_model, lower_config
 
             cfg = resolve_config(spec.config, smoke=spec.smoke)
@@ -758,8 +810,13 @@ class Engine:
                 lower_config(cfg, batch=b, seq=s, kind=spec.kind)
                 for (b, s) in spec.shapes
             )
-            cost = spec.cost or default_cost_model(spec.kind)
-            return graphs, cost
+            cost = spec.cost
+            if cost is None:
+                # an installed calibration is the default measured source, so
+                # confidence= works on config-lowered specs without passing
+                # the table explicitly
+                cost = measured_default(spec.kind) or default_cost_model(spec.kind)
+            return graphs, self._price_cost(spec, cost)
         if spec.cost is None:
             raise SpecError(
                 "cost= is required for explicit graph specs (config-lowered "
@@ -768,7 +825,7 @@ class Engine:
         graphs = (spec.graph,) if spec.graph is not None else spec.graphs
         for g in graphs:
             export_kind(g)  # typed error for non-graph inputs
-        return graphs, spec.cost
+        return graphs, self._price_cost(spec, spec.cost)
 
     def resolve_backend(
         self, spec: PartitionSpec, graphs: Sequence[AnyExport]

@@ -277,11 +277,11 @@ def memory_cost_model() -> CostModel:
     )
 
 
-def default_cost_model(kind: str) -> CostModel:
-    """The standard cost model per activation-graph ``kind`` — the single
-    default shared by the façade's config-lowered specs and the plan-table
-    builders (``"time"`` prices PCIe offload transfers, ``"memory"`` counts
-    working bytes)."""
+def analytical_cost_model(kind: str) -> CostModel:
+    """The datasheet cost model per activation-graph ``kind`` (``"time"``
+    prices PCIe offload transfers, ``"memory"`` counts working bytes) —
+    what :func:`default_cost_model` falls back to when no measured
+    calibration is installed."""
     if kind == "memory":
         return memory_cost_model()
     if kind == "time":
@@ -289,3 +289,19 @@ def default_cost_model(kind: str) -> CostModel:
 
         return tpu_host_offload_model()
     raise ValueError(f"unknown graph kind {kind!r}; 'time' or 'memory'")
+
+
+def default_cost_model(kind: str) -> CostModel:
+    """The standard cost model per activation-graph ``kind`` — the single
+    default shared by the façade's config-lowered specs and the plan-table
+    builders. When a measured calibration has been installed for this kind
+    (:func:`repro.core.calibration.install_measured_default`), its
+    mean-priced materialization takes precedence over the analytical model;
+    a clean calibration loop materializes the analytical model itself, so
+    fingerprints only move when the measurements did."""
+    from .calibration import measured_default
+
+    measured = measured_default(kind)
+    if measured is not None:
+        return measured.cost_model()
+    return analytical_cost_model(kind)

@@ -30,6 +30,11 @@ CLI::
     # load-time staleness probe of an existing table (no rebuild)
     python -m repro.launch.dse --arch qwen3-4b --probe-only --probe 8 \
         --out plan_qwen.npz
+
+    # close the calibration loop: captured ledger → measured cost table →
+    # drift probe of the tabulated plans against the refreshed profile
+    python -m repro.launch.dse --arch qwen3-4b --calibrate ledger.json \
+        --out plan_qwen.npz --probe 4
 """
 
 from __future__ import annotations
@@ -54,6 +59,7 @@ from .planner import _parse_buckets, derive_q_grid, lower_buckets, resolve_confi
 
 __all__ = [
     "build_sharded_table_for_arch",
+    "calibrate_table",
     "extend_for_arch",
     "probe_table",
 ]
@@ -117,12 +123,34 @@ def probe_table(
     k: Optional[int] = 4,
     seed: int = 0,
     smoke: bool = True,
+    measured=None,
+    drift_tol: float = 0.05,
 ) -> int:
     """Load-time staleness probe by arch name (see
-    :func:`repro.core.plan_table.probe_plan_table`)."""
+    :func:`repro.core.plan_table.probe_plan_table`). ``measured`` (a
+    :class:`repro.core.calibration.MeasuredCostTable`) additionally checks
+    probed cells' tabulated draw against the refreshed measured profile."""
     if isinstance(table, str):
         table = PlanTable.load(table)
-    return probe_plan_table(table, resolve_config(arch, smoke), k=k, seed=seed)
+    return probe_plan_table(table, resolve_config(arch, smoke), k=k, seed=seed,
+                            measured=measured, drift_tol=drift_tol)
+
+
+def calibrate_table(
+    ledger_json: str,
+    *,
+    kind: str = "time",
+    out_json: Optional[str] = None,
+):
+    """Rebuild a measured cost table from a captured ledger dump
+    (``EnergyLedger.dump_json`` / ``launch/traffic.py --ledger-out``) and
+    optionally persist it as versioned calibration JSON."""
+    from ..core.calibration import MeasuredCostTable
+
+    measured = MeasuredCostTable.from_ledger_json(ledger_json, kind=kind)
+    if out_json:
+        measured.to_json(out_json, source=ledger_json)
+    return measured
 
 
 def _parse_q_list(text: str) -> List[float]:
@@ -154,6 +182,19 @@ def main(argv=None) -> int:
     ap.add_argument("--probe-only", action="store_true",
                     help="only probe the existing table at --out — no build, "
                     "no extend, nothing written")
+    ap.add_argument("--calibrate", default=None, metavar="LEDGER_JSON",
+                    help="rebuild a measured cost table from a captured "
+                    "energy-ledger dump (traffic --ledger-out / "
+                    "EnergyLedger.dump_json), write it as calibration JSON "
+                    "(--calibration-out), and probe the table at --out "
+                    "against the measured profile — exits nonzero when any "
+                    "probed cell's measured draw drifts beyond --drift-tol")
+    ap.add_argument("--calibration-out", default=None,
+                    help="measured-table JSON path (--calibrate; default "
+                    "<out>.calib.json)")
+    ap.add_argument("--drift-tol", type=float, default=0.05,
+                    help="relative per-cycle drift tolerance for the "
+                    "calibration probe (default 0.05)")
     ap.add_argument("--seed", type=int, default=0, help="probe cell RNG seed")
     ap.add_argument("--out", required=True, help="table .npz path")
     ap.add_argument("--full", action="store_true",
@@ -171,11 +212,13 @@ def main(argv=None) -> int:
 
     buckets = _parse_buckets(args.buckets)
     smoke = not args.full
-    if args.extend or args.probe_only:
+    if args.extend or args.probe_only or args.calibrate:
         # the base table fixes the grid parameters — refuse silent drops
         if args.kind is not None or args.q_points is not None:
             ap.error("--kind/--q-points are fixed by the existing table; "
-                     "not valid with --extend/--probe-only")
+                     "not valid with --extend/--probe-only/--calibrate")
+    if args.calibrate and (args.extend or args.probe_only):
+        ap.error("--calibrate is its own mode; drop --extend/--probe-only")
     def _flush_telemetry() -> None:
         if args.trace_out:
             n_ev = TRACER.write(args.trace_out)
@@ -189,6 +232,32 @@ def main(argv=None) -> int:
                         seed=args.seed, smoke=smoke)
         print(f"[dse] probe: {n} cells of {args.out} re-validated against "
               f"the live engine — clean")
+        _flush_telemetry()
+        return 0
+    if args.calibrate:
+        from ..core.plan_table import StaleTableError
+
+        table = PlanTable.load(args.out)
+        calib_out = args.calibration_out or args.out + ".calib.json"
+        measured = calibrate_table(args.calibrate, kind=table.kind,
+                                   out_json=calib_out)
+        restore = measured.stats["restore"]
+        print(f"[dse] calibrated {measured.n_samples} ledger samples from "
+              f"{args.calibrate} → {calib_out}")
+        print(f"[dse]   restore: n={restore.count} mean={restore.mean:.3e} "
+              f"std={restore.std:.3e} (analytical "
+              f"e_startup={float(measured.base.e_startup):.3e})")
+        print(f"[dse]   fingerprint: {measured.fingerprint()[:16]}")
+        try:
+            n = probe_table(table, args.arch, k=args.probe or None,
+                            seed=args.seed, smoke=smoke, measured=measured,
+                            drift_tol=args.drift_tol)
+        except StaleTableError as exc:
+            print(f"[dse]   STALE: {exc}", file=sys.stderr)
+            _flush_telemetry()
+            return 1
+        print(f"[dse]   probe:   {n} cells of {args.out} within "
+              f"{args.drift_tol:.1%} of the measured profile — accepted")
         _flush_telemetry()
         return 0
     t0 = time.time()

@@ -382,9 +382,31 @@ def main(argv=None) -> int:
                     help="write a Chrome trace_event JSON (Perfetto-loadable)")
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics-registry snapshot as JSON")
+    ap.add_argument("--calibration", default=None,
+                    help="measured-cost calibration JSON (from "
+                         "`launch/dse.py --calibrate`): probe the plan table "
+                         "against the measured profile before serving and "
+                         "refuse stale plans (requires --plan-table)")
+    ap.add_argument("--drift-tol", type=float, default=0.05,
+                    help="relative drift tolerance for the --calibration "
+                         "probe (default 0.05)")
     args = ap.parse_args(argv)
     if args.trace_out:
         TRACER.configure(enabled=True)
+    if args.calibration:
+        if not args.plan_table:
+            ap.error("--calibration requires --plan-table")
+        from ..core.calibration import MeasuredCostTable
+        from ..core.plan_table import PlanTable, probe_plan_table
+
+        measured = MeasuredCostTable.from_json(args.calibration)
+        n = probe_plan_table(PlanTable.load(args.plan_table),
+                             _resolve(args.arch, not args.full),
+                             k=4, measured=measured,
+                             drift_tol=args.drift_tol)
+        print(f"[serve] calibration probe: {n} cells of {args.plan_table} "
+              f"within {args.drift_tol:.1%} of the measured profile "
+              f"({measured.n_samples} samples) — serving")
     serve(args.arch, args.batch, args.prompt_len, args.gen,
           smoke=not args.full, plan_table=args.plan_table,
           energy_budget=args.energy_budget)

@@ -934,7 +934,30 @@ def main(argv=None) -> int:
                          "of the run; also gates on ledger conservation")
     ap.add_argument("--metrics-out", default=None,
                     help="write the metrics-registry snapshot as JSON")
+    ap.add_argument("--ledger-out", default=None,
+                    help="write the run's energy ledger as calibration JSON "
+                         "(deterministic (rid, cycle) row order — feed back "
+                         "through `dse --calibrate` or --replan)")
+    ap.add_argument("--table-out", default=None,
+                    help="with --build: save the in-process plan table (.npz) "
+                         "so `dse --calibrate` can probe it afterwards")
+    ap.add_argument("--replan", action="store_true",
+                    help="close the calibration loop in-process: ingest the "
+                         "run's ledger into a measured cost table, rebuild "
+                         "the plan table under it, and probe the rebuild "
+                         "against the measured profile (requires --build)")
+    ap.add_argument("--drift-tol", type=float, default=0.05,
+                    help="relative drift tolerance for the --replan probe")
+    ap.add_argument("--expect-replan-identical", action="store_true",
+                    help="exit nonzero unless the --replan rebuild is "
+                         "byte-identical to the original table (holds when "
+                         "the measured draw matches the analytical model)")
     args = ap.parse_args(argv)
+    if (args.replan or args.table_out) and not (args.build
+                                                or args.plan_table is None):
+        ap.error("--replan/--table-out need the in-process --build path")
+    if args.expect_replan_identical and not args.replan:
+        ap.error("--expect-replan-identical requires --replan")
 
     # CLI runs report through the structured emitter on stdout; library and
     # pytest use stay silent (no handler attached).
@@ -954,6 +977,10 @@ def main(argv=None) -> int:
                                      smoke=not args.full)
         planner = ServePlanner(table)
         _LOG.emit(f"built {table.summary()}")
+        if args.table_out:
+            table.save(args.table_out)
+            _LOG.emit(f"saved plan table to {args.table_out}",
+                      path=args.table_out)
     else:
         planner = ServePlanner.from_file(args.plan_table)
     executor = PlannedExecutor(args.arch, planner, smoke=not args.full)
@@ -1007,6 +1034,11 @@ def main(argv=None) -> int:
         METRICS.dump_json(args.metrics_out, tool="traffic", arch=args.arch)
         _LOG.emit(f"wrote metrics snapshot to {args.metrics_out}",
                   path=args.metrics_out)
+    if args.ledger_out:
+        report.ledger.dump_json(args.ledger_out, tool="traffic",
+                                arch=args.arch, kind="time", seed=args.seed)
+        _LOG.emit(f"wrote {len(report.ledger.entries)} ledger entries to "
+                  f"{args.ledger_out}", path=args.ledger_out)
 
     failures = []
     if report.ledger_conserved is False:
@@ -1023,6 +1055,41 @@ def main(argv=None) -> int:
                         f"{args.expect_deferred}")
     if args.expect_zero_retrace and report.retraces:
         failures.append(f"retraces {report.trace_delta} != 0 after warmup")
+    if args.replan:
+        # one-round-trip calibration loop: run ledger → measured table →
+        # rebuild under the measured default → drift probe of the rebuild
+        from ..configs import resolve_config
+        from ..core.calibration import MeasuredCostTable, use_measured
+        from ..core.plan_table import StaleTableError, probe_plan_table
+
+        measured = MeasuredCostTable.from_ledger(report.ledger, kind="time")
+        restore = measured.stats["restore"]
+        _LOG.emit(f"calibrated {measured.n_samples} ledger samples "
+                  f"(restore mean={restore.mean:.6g} std={restore.std:.6g}, "
+                  f"fingerprint {measured.fingerprint()[:12]})",
+                  n_samples=measured.n_samples)
+        with use_measured(measured):
+            replanned = build_table_for_arch(args.arch, buckets, n_q=8,
+                                             smoke=not args.full)
+        try:
+            n = probe_plan_table(replanned, resolve_config(args.arch,
+                                                           not args.full),
+                                 k=4, seed=args.seed,
+                                 cost=measured.cost_model(),
+                                 measured=measured,
+                                 drift_tol=args.drift_tol)
+            _LOG.emit(f"replan probe: {n} cells within "
+                      f"{args.drift_tol:.1%} of the measured profile")
+        except StaleTableError as exc:
+            failures.append(f"replanned table stale vs measured profile: "
+                            f"{exc}")
+        identical = (replanned.content_digest() == table.content_digest())
+        _LOG.emit(f"replanned table digest {replanned.content_digest()[:16]} "
+                  f"({'identical to' if identical else 'differs from'} "
+                  f"the original)", identical=identical)
+        if args.expect_replan_identical and not identical:
+            failures.append("replanned table differs from the original "
+                            "(measured draw drifted from the model)")
     if failures:
         _LOG.emit(f"FAILED: {'; '.join(failures)}")
         return 1

@@ -155,10 +155,22 @@ class EnergyLedger:
     def to_rows(self) -> List[Dict[str, object]]:
         return [dataclasses.asdict(e) for e in self.entries]
 
+    def sorted_rows(self) -> List[Dict[str, object]]:
+        """:meth:`to_rows` in deterministic (rid, cycle) order. Append order
+        depends on interleaving (the traffic harness commits many requests'
+        cycles through one batched executor), so exports sort: the stable
+        sort keeps each (rid, cycle)'s category rows in charge order while
+        making the file — and any calibration fingerprint built from it —
+        reproducible across schedules that charged the same work."""
+        return [
+            dataclasses.asdict(e)
+            for e in sorted(self.entries, key=lambda e: (e.rid, e.cycle))
+        ]
+
     def dump_json(self, path: str, **meta) -> None:
         payload = dict(meta)
         payload["summary"] = self.summary()
-        payload["entries"] = self.to_rows()
+        payload["entries"] = self.sorted_rows()
         with open(path, "w") as f:
             json.dump(payload, f, indent=2)
             f.write("\n")

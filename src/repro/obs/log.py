@@ -61,7 +61,12 @@ def enable_cli_output(
             # Rebind to the current stdout: successive CLI runs under a test
             # harness each get a fresh replaced stream.
             if getattr(h, "stream", None) is not resolved:
-                h.setStream(resolved)  # type: ignore[attr-defined]
+                try:
+                    h.setStream(resolved)  # type: ignore[attr-defined]
+                except ValueError:
+                    # setStream flushes the old stream first; a test harness
+                    # may have closed it (capsys teardown) — rebind directly
+                    h.stream = resolved  # type: ignore[attr-defined]
             return h
     handler = logging.StreamHandler(resolved)
     setattr(handler, _CLI_HANDLER_FLAG, True)

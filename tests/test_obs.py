@@ -234,6 +234,190 @@ def test_ledger_dump_json(tmp_path):
     }
 
 
+def test_ledger_dump_json_rows_sorted_by_rid_cycle(tmp_path):
+    """Regression: dump_json exports rows in deterministic (rid, cycle)
+    order regardless of charge order, so calibration fingerprints built
+    from a dumped ledger don't depend on the traffic schedule."""
+    from repro.obs.ledger import EnergyLedger
+
+    led = EnergyLedger()
+    # charge in a schedule-ish interleaved order: rid 2 first, rid 0 last
+    led.charge(2, 0, restore=0.1, compute=0.2)
+    led.charge(1, 1, compute=0.4)
+    led.overhead(1, 0, 0.05)
+    led.charge(1, 0, restore=0.1)
+    led.charge(0, 0, commit=0.3)
+    path = tmp_path / "ledger.json"
+    led.dump_json(str(path))
+    rows = json.loads(path.read_text())["entries"]
+    keys = [(r["rid"], r["cycle"]) for r in rows]
+    assert keys == sorted(keys)
+    assert keys[0] == (0, 0) and keys[-1] == (2, 0)
+    # stable within one (rid, cycle): replay was appended before the charge
+    rid1c0 = [r["category"] for r in rows if (r["rid"], r["cycle"]) == (1, 0)]
+    assert rid1c0 == ["replay", "restore"]
+    # in-memory to_rows() keeps raw append order — only the export sorts
+    assert [(r["rid"], r["cycle"]) for r in led.to_rows()][0] == (2, 0)
+
+
+def test_ledger_dump_json_interleaving_invariant(tmp_path):
+    """Two schedules charging the same (rid, cycle, category, energy) set
+    in different orders dump byte-identical entry lists."""
+    import random
+
+    from repro.obs.ledger import EnergyLedger
+
+    rng = random.Random(17)
+    charges = [(rid, cyc, rng.uniform(0.01, 1.0), rng.uniform(0.0, 0.5))
+               for rid in range(3) for cyc in range(4)]
+    a, b = EnergyLedger(), EnergyLedger()
+    for rid, cyc, compute, commit in charges:
+        a.charge(rid, cyc, restore=0.1, compute=compute, commit=commit)
+    rng.shuffle(charges)
+    for rid, cyc, compute, commit in charges:
+        b.charge(rid, cyc, restore=0.1, compute=compute, commit=commit)
+    pa, pb = tmp_path / "a.json", tmp_path / "b.json"
+    a.dump_json(str(pa))
+    b.dump_json(str(pb))
+    assert (json.loads(pa.read_text())["entries"]
+            == json.loads(pb.read_text())["entries"])
+
+
+# -- ledger properties under random request/cycle/crash schedules ------------
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+
+def _random_ledger_schedule(rng):
+    """Build a ledger from a random request/cycle/crash schedule, returning
+    (ledger, expected per-category totals, expected per-rid totals,
+    expected overhead total)."""
+    from repro.obs.ledger import CHARGED_CATEGORIES, EnergyLedger
+
+    led = EnergyLedger()
+    by_cat = {c: 0.0 for c in CHARGED_CATEGORIES}
+    by_rid = {}
+    overhead = 0.0
+    events = []
+    for rid in range(rng.randint(1, 5)):
+        for cycle in range(rng.randint(1, 6)):
+            for _ in range(rng.randint(0, 2)):  # crashed attempts first
+                events.append(("crash", rid, cycle, rng.uniform(0.0, 0.5)))
+            events.append(("commit", rid, cycle, rng.uniform(0.0, 0.2),
+                           rng.uniform(0.0, 1.0), rng.uniform(0.0, 0.1)))
+    rng.shuffle(events)  # schedule interleaving is arbitrary
+    for ev in events:
+        if ev[0] == "crash":
+            _, rid, cycle, e = ev
+            led.overhead(rid, cycle, e)
+            overhead += e
+        else:
+            _, rid, cycle, restore, compute, commit = ev
+            led.charge(rid, cycle, restore=restore, compute=compute,
+                       commit=commit)
+            req = by_rid.setdefault(rid, {c: 0.0 for c in CHARGED_CATEGORIES})
+            for cat, e in (("restore", restore), ("compute", compute),
+                           ("commit", commit)):
+                by_cat[cat] += e
+                req[cat] += e
+    return led, by_cat, by_rid, overhead
+
+
+def check_ledger_schedule_invariants(rng):
+    from repro.obs.ledger import CHARGED_CATEGORIES, LedgerImbalance
+
+    led, by_cat, by_rid, overhead = _random_ledger_schedule(rng)
+    charged = sum(by_cat.values())
+    # conservation: charged categories sum to the total; replay is booked
+    # outside the admission reservation by design
+    assert led.charged_total() == pytest.approx(charged, rel=1e-12)
+    assert led.overhead_total() == pytest.approx(overhead, rel=1e-12)
+    assert led.conserves(charged)
+    if charged > 0:
+        with pytest.raises(LedgerImbalance):
+            led.check_conservation(charged * 1.5 + 1.0)
+    # by_category / by_request sum consistency
+    cat = led.by_category()
+    for c in CHARGED_CATEGORIES:
+        assert cat[c] == pytest.approx(by_cat[c], rel=1e-12, abs=1e-15)
+        per_req = sum(led.by_request(rid)[c] for rid in by_rid)
+        assert per_req == pytest.approx(cat[c], rel=1e-12, abs=1e-15)
+    assert cat["replay"] == pytest.approx(overhead, rel=1e-12, abs=1e-15)
+    for rid, want in by_rid.items():
+        got = led.by_request(rid)
+        for c in CHARGED_CATEGORIES:
+            assert got[c] == pytest.approx(want[c], rel=1e-12, abs=1e-15)
+
+
+def test_ledger_random_schedule_invariants_seeded():
+    import random
+
+    for seed in range(25):
+        check_ledger_schedule_invariants(random.Random(seed))
+
+
+def test_ledger_crash_heavy_schedule_overhead_fraction():
+    """All-crash schedules keep charged_total at 0 and the overhead
+    fraction guard still divides safely."""
+    from repro.obs.ledger import EnergyLedger
+
+    led = EnergyLedger()
+    for attempt in range(4):
+        led.overhead(0, 0, 0.25)
+    assert led.charged_total() == 0.0
+    assert led.overhead_total() == pytest.approx(1.0)
+    assert led.overhead_fraction() == 0.0  # guard: no charged base
+    assert led.conserves(0.0)
+
+
+if HAVE_HYPOTHESIS:
+
+    class TestLedgerHypothesis:
+        @given(seed=st.integers(min_value=0, max_value=2**32 - 1))
+        @settings(max_examples=50, deadline=None)
+        def test_random_schedule_invariants(self, seed):
+            import random
+
+            check_ledger_schedule_invariants(random.Random(seed))
+
+else:
+
+    def test_ledger_fuzz_skipped_without_hypothesis():
+        pytest.importorskip("hypothesis")
+
+
+# -- CLI log stream rebind ---------------------------------------------------
+
+
+def test_cli_output_rebinds_over_closed_stream():
+    """Regression: a second CLI run must survive the previous run's stream
+    having been closed under it (pytest capsys teardown) — setStream
+    flushes the old stream, which raises on a closed file."""
+    import io
+
+    from repro.obs.log import disable_cli_output, enable_cli_output
+
+    name = "repro.test_rebind"
+    try:
+        first = io.StringIO()
+        enable_cli_output(name, tag="t", stream=first)
+        first.close()
+        second = io.StringIO()
+        h = enable_cli_output(name, tag="t", stream=second)  # must not raise
+        assert h.stream is second
+        import logging
+
+        logging.getLogger(name).info("alive")
+        assert second.getvalue() == "[t] alive\n"
+    finally:
+        disable_cli_output(name)
+
+
 # -- zero-division guards (satellite regression tests) -----------------------
 
 

@@ -518,6 +518,96 @@ def test_continuation_step_contract(synthetic):
     assert cont.total_cost == pytest.approx(3 * (E_STARTUP + E_TOTAL))
 
 
+def test_crash_on_deferred_requests_first_cycle(synthetic):
+    """Fault matrix × admission control: a request that was deferred by the
+    harvest pool crashes on its very first cycle after finally being
+    admitted. The replay books as overhead outside the admission
+    reservation, the request still completes, and the ledger conserves."""
+    from repro.launch.traffic import HarvestModel, TrafficHarness
+
+    planner, ex = synthetic
+    fired = {}
+
+    class CrashFirstCycle:
+        def __init__(self, rid):
+            self.rid = rid
+
+        def __call__(self, b, phase):
+            from repro.core import PowerFailure
+
+            if self.rid not in fired and b == 0 and phase == "executed":
+                fired[self.rid] = True
+                raise PowerFailure("injected on the deferred head's cycle 0")
+
+    def hook_for(request):
+        return CrashFirstCycle(request.rid) if request.rid == 1 else None
+
+    # e_req = 3 * (E_STARTUP + E_TOTAL) = 1.05: rid 0 drains the pool, rid 1
+    # must wait for harvest before admission
+    harness = TrafficHarness(
+        ex, cycle_budget=0.4, keep_tokens=True,
+        harvest=HarvestModel(capacity=1.2, rate=0.5),
+        crash_hook_factory=hook_for)
+    report = harness.run([_req(0), _req(1, t=0.5)])
+
+    assert fired == {1: True}
+    assert report.deferred == 1 and report.admitted == 2
+    assert report.completed == 2
+    assert report.power_failures == 1
+    assert report.commit_delta == {"commits": 6, "replays": 1}
+    # the crashed attempt is booked as replay overhead on (rid=1, cycle=0),
+    # at the full cycle draw, outside the reservation
+    replays = [e for e in report.ledger.entries if e.category == "replay"]
+    assert [(e.rid, e.cycle) for e in replays] == [(1, 0)]
+    assert replays[0].energy == pytest.approx(E_STARTUP + E_TOTAL)
+    assert report.ledger_conserved
+    assert report.ledger.overhead_total() == pytest.approx(
+        E_STARTUP + E_TOTAL)
+    # idempotent replay: deferred-then-crashed output matches the clean one
+    np.testing.assert_array_equal(report.tokens[1], report.tokens[0])
+
+
+def test_crash_between_reservation_and_first_commit(synthetic):
+    """Fault matrix × admission control: power failure after the admission
+    reservation drew from the pool but before the first cycle ever
+    committed ('loaded' phase — nothing durable yet). The reservation is
+    not refunded, the replay books at the full cycle cost, and the request
+    completes with conservation intact."""
+    from repro.launch.traffic import HarvestModel, TrafficHarness
+
+    planner, ex = synthetic
+    state = {"fired": False}
+
+    def hook(b, phase):
+        from repro.core import PowerFailure
+
+        if not state["fired"] and b == 0 and phase == "loaded":
+            state["fired"] = True
+            raise PowerFailure("injected before the first commit")
+
+    harness = TrafficHarness(
+        ex, cycle_budget=0.4, keep_tokens=True,
+        harvest=HarvestModel(capacity=2.0, rate=1.0),
+        crash_hook_factory=lambda r: hook)
+    report = harness.run([_req(0)])
+
+    assert state["fired"]
+    assert report.power_failures == 1
+    assert report.completed == 1
+    # no cycle had committed, so the replay re-runs cycle 0 from scratch
+    assert report.commit_delta == {"commits": 3, "replays": 1}
+    replays = [(e.rid, e.cycle) for e in report.ledger.entries
+               if e.category == "replay"]
+    assert replays == [(0, 0)]
+    assert report.ledger_conserved
+    # charged total is the clean 3-cycle energy; the crashed attempt rides
+    # on top as overhead
+    assert report.ledger.charged_total() == pytest.approx(
+        3 * (E_STARTUP + E_TOTAL))
+    assert report.ledger.overhead_total() == pytest.approx(
+        E_STARTUP + E_TOTAL)
+
+
 # -- reset hooks + global counters (satellite) -------------------------------
 
 
