@@ -213,8 +213,10 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
     Rows: export footprint on the full 5458-task head-count graph (dense
     computed analytically — materializing it is the ~1 GB blow-up the CSR
     layout exists to avoid), solver timings on a reduced graph where both
-    backends run, and (unless ``smoke``) the full-graph CSR solve. Results
-    are also dumped to BENCH_partition_sweep.json for trend tracking.
+    backends run, the objective matrix (minimax + exact-K per backend, each
+    bit-compared against the numpy oracle — any mismatch exits nonzero),
+    and (unless ``smoke``) the full-graph CSR solve. Results are also
+    dumped to BENCH_partition_sweep.json for trend tracking.
     """
     from repro.core import dense_export_nbytes, q_min as qmin_np
 
@@ -262,6 +264,40 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
             f"{times['scan'] / times['pallas']:.2f}",
             "dense scan vs CSR kernel at equal N")
 
+    # Objective matrix: the kernel's minimax and exact-K modes, timed per
+    # backend and bit-compared against the numpy oracle. The *_bit_identical
+    # rows are the acceptance gate — CI runs this section as a named step
+    # and any mismatch exits nonzero instead of printing a row nobody reads.
+    mismatches = []
+    ref_qmin = float(qmin_np(g, CM))
+    k = min(18, g.n_tasks)
+    ref_part = solve(PartitionSpec(graph=g, cost=CM, objective="exact_k",
+                                   n_bursts=k, backend="numpy")).partition()
+    for be in backends:
+        mm_spec = PartitionSpec(graph=g, cost=CM, objective="minimax",
+                                backend=be)
+        ek_spec = PartitionSpec(graph=g, cost=CM, objective="exact_k",
+                                n_bursts=k, backend=be)
+        solve(mm_spec), solve(ek_spec)  # compile outside the timed region
+        t_mm = best_of(lambda: solve(mm_spec).q_min())
+        t_ek = best_of(lambda: solve(ek_spec).partition())
+        row(f"partition_sweep.objectives.minimax_{be}_us",
+            f"{t_mm * 1e6:.0f}", f"Q_min over n={g.n_tasks}")
+        row(f"partition_sweep.objectives.exact_k_{be}_us",
+            f"{t_ek * 1e6:.0f}", f"optimal {k}-burst partition")
+        mm_ok = solve(mm_spec).q_min() == ref_qmin
+        got = solve(ek_spec).partition()
+        ek_ok = (list(got.bounds) == list(ref_part.bounds)
+                 and got.e_total == ref_part.e_total)
+        row(f"partition_sweep.objectives.minimax_{be}_bit_identical",
+            int(mm_ok), "vs numpy q_min; acceptance: 1")
+        row(f"partition_sweep.objectives.exact_k_{be}_bit_identical",
+            int(ek_ok), "vs numpy optimal_partition_k; acceptance: 1")
+        if not mm_ok:
+            mismatches.append(f"minimax[{be}] != numpy q_min")
+        if not ek_ok:
+            mismatches.append(f"exact_k[{be}] != numpy optimal partition")
+
     # The full graph only exists through the CSR backend.
     if not smoke:
         be = "pallas" if backend == "auto" else backend
@@ -283,6 +319,9 @@ def partition_sweep(backend="auto", smoke=False, json_out=None):
         os.path.dirname(__file__), "BENCH_partition_sweep.json"
     )
     _merge_bench_json(path, records, backend=backend, smoke=bool(smoke))
+    if mismatches:
+        raise SystemExit("partition_sweep objective matrix: "
+                         + "; ".join(mismatches))
 
 
 def _merge_bench_json(path, new_rows, **meta):

@@ -135,7 +135,43 @@ class KernelStats:
 
     @classmethod
     def from_dict(cls, d: Mapping[str, object]) -> "KernelStats":
-        return cls(count=int(d["count"]), mean=float(d["mean"]), m2=float(d["m2"]))
+        """Load one stats entry, validating every field.
+
+        The Welford invariants are enforced here — not left to the
+        fingerprint check, which is skipped for legitimately fingerprint-free
+        payloads and recomputable by anyone editing the file — so a NaN mean
+        or negative count can never survive into confidence pricing. Raises
+        the typed tamper error (:class:`CalibrationError`).
+        """
+        try:
+            count = int(d["count"])
+            mean = float(d["mean"])
+            m2 = float(d["m2"])
+        except (KeyError, TypeError, ValueError) as exc:
+            raise CalibrationError(f"malformed stats entry {d!r}") from exc
+        if count < 0:
+            raise CalibrationError(
+                f"stats entry has negative count {count}: the file was "
+                f"edited or produced by an incompatible build"
+            )
+        if not math.isfinite(mean) or not math.isfinite(m2):
+            raise CalibrationError(
+                f"stats entry has non-finite mean/m2 ({mean!r}, {m2!r}): "
+                f"the file was edited or produced by an incompatible build"
+            )
+        if m2 < 0.0:
+            raise CalibrationError(
+                f"stats entry has negative m2 {m2!r} (variance cannot be "
+                f"negative): the file was edited or produced by an "
+                f"incompatible build"
+            )
+        if count == 0 and (mean != 0.0 or m2 != 0.0):
+            raise CalibrationError(
+                f"stats entry claims zero samples but non-zero moments "
+                f"(mean={mean!r}, m2={m2!r}): the file was edited or "
+                f"produced by an incompatible build"
+            )
+        return cls(count=count, mean=mean, m2=m2)
 
 
 class MeasuredCostTable:

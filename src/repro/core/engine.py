@@ -93,10 +93,11 @@ class SpecError(EngineError):
 class UnsupportedObjective(EngineError):
     """The selected backend does not implement the requested objective.
 
-    Raised identically by every backend (the parametrized error-path suite
-    pins this): e.g. the Pallas sweep kernel currently computes only the sum
-    DP, so ``objective="minimax"`` / ``"exact_k"`` on ``backend="pallas"``
-    raise this until the §4.4 combine lands as a kernel mode (ROADMAP).
+    Every built-in backend now implements all of :data:`OBJECTIVES` (the
+    §4.4 combines are Pallas kernel modes), so in the default registry this
+    only fires for externally registered backends with restricted
+    ``objectives`` capability flags — the error-path suite pins the message
+    against exactly such a fake backend.
     """
 
 
@@ -252,10 +253,17 @@ def resolve_jit_backend(
     reg = _REGISTRY if registry is None else registry
     jit = [b for b in reg.values() if b.auto_eligible]
     if backend != "auto":
-        if backend not in [b.name for b in jit]:
+        if backend not in reg:
             raise SpecError(
-                f"unknown backend {backend!r}; registered jit backends: "
-                f"{sorted(b.name for b in jit)}"
+                f"unknown backend {backend!r}; registered: {sorted(reg)}"
+            )
+        if backend not in [b.name for b in jit]:
+            # registered, just not a jit-dispatch target — saying "unknown"
+            # here sent users hunting for typos that weren't there
+            raise SpecError(
+                f"backend {backend!r} is registered but not jit-dispatchable "
+                f"(auto_eligible=False); registered: {sorted(reg)}; "
+                f"jit-dispatchable: {sorted(b.name for b in jit)}"
             )
         return backend
     cands = [b for b in jit if objective in b.objectives]
@@ -705,18 +713,24 @@ class _JitBackend:
         if req.objective == "minimax":
             return {
                 "qmins": tuple(
-                    pj._q_min_scan(g, req.cost) for g in req.graphs
+                    pj._q_min_jit(
+                        g, req.cost,
+                        backend=req.backend, interpret=req.interpret,
+                    )
+                    for g in req.graphs
                 )
             }
         return {
             "parts": tuple(
                 (
-                    pj._optimal_k_scan(
+                    pj._optimal_k_jit(
                         g,
                         req.cost,
                         req.n_bursts,
                         req.q_values[0],
                         objective=req.k_objective,
+                        backend=req.backend,
+                        interpret=req.interpret,
                     ),
                 )
                 for g in req.graphs
@@ -742,7 +756,7 @@ class ScanBackend(_JitBackend):
 
 @register_backend(
     "pallas",
-    objectives=("sum",),
+    objectives=("sum", "minimax", "exact_k"),
     supports_sharding=True,      # host-chunked Q sharding (see partition_jax)
     supports_csr=True,
     supports_dense=False,
@@ -751,8 +765,10 @@ class PallasBackend(_JitBackend):
     """The fused CSR column-sweep/DP kernel
     (:mod:`repro.kernels.partition_sweep`) over compressed
     :class:`GraphCSRArrays` exports — required for skewed-degree graphs
-    (the 5458-task head count is ~1 GB dense, ~500 kB CSR). Sum objective
-    only until the §4.4 combines land as kernel modes (ROADMAP)."""
+    (the 5458-task head count is ~1 GB dense, ~500 kB CSR). All three
+    objectives are static kernel modes (the §4.4 minimax and exact-K
+    combines ride the same slot-chunked column scan), each bit-identical
+    to its numpy oracle in interpret mode."""
 
     name = "pallas"
 
@@ -864,8 +880,8 @@ class Engine:
                 raise UnsupportedObjective(
                     f"backend {info.name!r} does not implement objective "
                     f"{spec.objective!r} (supported: "
-                    f"{sorted(info.objectives)}); the numpy and scan "
-                    f"backends implement all of {OBJECTIVES}"
+                    f"{sorted(info.objectives)}); backends implementing it: "
+                    f"{sorted(b.name for b in self._registry.values() if spec.objective in b.objectives)}"
                 )
             if spec.sharding is not None and not info.supports_sharding:
                 raise SpecError(

@@ -138,6 +138,8 @@ SOLVE_COUNT = METRICS.counter_dict(
         "sweep_jax_sharded",
         "q_min_scan",
         "optimal_k_scan",
+        "q_min_pallas",
+        "optimal_k_pallas",
     ),
 )
 
@@ -464,13 +466,15 @@ def _as_csr(graph: AnyExport) -> GraphCSRArrays:
     return graph.to_csr_arrays() if isinstance(graph, TaskGraph) else graph
 
 
-def _select_backend(graph: AnyExport, backend: str) -> str:
+def _select_backend(
+    graph: AnyExport, backend: str, objective: str = "sum"
+) -> str:
     """Resolve ``backend="auto"`` per graph — delegates to the façade's
     backend registry (:func:`repro.core.engine.resolve_jit_backend`), which
     replaced the hand-rolled if-chain that used to live here. The size
     threshold stays in this module as ``_AUTO_DENSE_BYTES`` (read at call
     time, so tests can monkeypatch it)."""
-    return resolve_jit_backend(graph, backend)
+    return resolve_jit_backend(graph, backend, objective)
 
 
 # Serving-path upload caches (see core/_cache.py for the id+weakref idiom):
@@ -997,7 +1001,9 @@ def _optimal_partition_jax(
 
 
 # ---------------------------------------------------------------------------
-# Scan-backend minimax / exact-K — the façade's objective= axis
+# Jit-backend minimax / exact-K — the façade's objective= axis (scan re-
+# expressions + the Pallas kernel modes, routed per backend by the
+# _q_min_jit / _optimal_k_jit dispatchers below)
 # ---------------------------------------------------------------------------
 
 
@@ -1070,3 +1076,110 @@ def _optimal_k_scan(
     part = _partition_from_bounds(graph, cost, bounds, q_max)
     part.validate(graph)
     return part
+
+
+def _q_min_pallas(
+    graph: AnyExport, cost: CostModel, interpret: Optional[bool] = None
+) -> float:
+    """§4.4 storage minimization on the Pallas kernel's minimax mode — the
+    façade's ``objective="minimax"`` on ``backend="pallas"``. The max/min
+    combine is exact in float64, so Q_min is bit-identical to the numpy
+    :func:`repro.core.partition.q_min` on *every* graph in interpret mode
+    (no unroll-width caveat: the CSR kernel replays ColumnSweep's exact
+    slot order)."""
+    SOLVE_COUNT["q_min_pallas"] += 1
+    csr = _as_csr(graph)
+    if csr.n_tasks == 0:
+        return 0.0
+    from ..kernels.partition_sweep import ops as sweep_ops  # lazy: jax-heavy
+
+    mns, _ = sweep_ops.sweep_columns(
+        csr, cost, (), objective="minimax", interpret=interpret
+    )
+    return float(mns[csr.n_tasks - 1, 0])
+
+
+def _optimal_k_pallas(
+    graph: AnyExport,
+    cost: CostModel,
+    n_bursts: int,
+    q_max: Optional[float] = None,
+    objective: str = "sum",
+    interpret: Optional[bool] = None,
+) -> Partition:
+    """Exact-K partition on the Pallas kernel's exact_k mode — the façade's
+    ``objective="exact_k"`` on ``backend="pallas"``. The kernel's lane axis
+    carries the burst count, so its (vals, bsts) tables have the layout of
+    the scan backend's ``_exactk_sweep`` and reconstruct with the identical
+    host walk — bounds and tie-breaks match the numpy
+    :func:`repro.core.partition._optimal_k` bit-for-bit in interpret mode."""
+    SOLVE_COUNT["optimal_k_pallas"] += 1
+    if not isinstance(graph, TaskGraph):
+        raise ExportMismatch(
+            "exact_k needs the TaskGraph to price the reconstructed bursts; "
+            "pass the graph rather than a pre-exported layout"
+        )
+    csr = _as_csr(graph)
+    n = csr.n_tasks
+    if not 1 <= n_bursts <= max(n, 1):
+        raise ValueError(f"n_bursts={n_bursts} out of range for {n} tasks")
+    if n == 0:
+        return Partition([], [], q_max)
+    if objective not in ("sum", "max"):
+        raise ValueError(f"objective must be 'sum' or 'max', got {objective!r}")
+    from ..kernels.partition_sweep import ops as sweep_ops  # lazy: jax-heavy
+
+    vals, bsts = sweep_ops.sweep_columns(
+        csr,
+        cost,
+        (q_max,),
+        objective="exact_k",
+        n_bursts=int(n_bursts),
+        k_objective=objective,
+        interpret=interpret,
+    )
+    if not np.isfinite(vals[n - 1, n_bursts]):
+        raise Infeasible(f"no {n_bursts}-burst partition within Q_max={q_max}")
+    bounds: List[Tuple[int, int]] = []
+    j, b = n, n_bursts
+    while j > 0:
+        i = int(bsts[j - 1, b])
+        bounds.append((i, j))
+        j, b = i - 1, b - 1
+    bounds.reverse()
+    part = _partition_from_bounds(graph, cost, bounds, q_max)
+    part.validate(graph)
+    return part
+
+
+def _q_min_jit(
+    graph: AnyExport,
+    cost: CostModel,
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> float:
+    """Route the façade's ``objective="minimax"`` to the resolved jit
+    backend (scan re-expression or Pallas kernel mode)."""
+    if _select_backend(graph, backend, objective="minimax") == "pallas":
+        return _q_min_pallas(graph, cost, interpret=interpret)
+    return _q_min_scan(graph, cost)
+
+
+def _optimal_k_jit(
+    graph: AnyExport,
+    cost: CostModel,
+    n_bursts: int,
+    q_max: Optional[float] = None,
+    objective: str = "sum",
+    *,
+    backend: str = "auto",
+    interpret: Optional[bool] = None,
+) -> Partition:
+    """Route the façade's ``objective="exact_k"`` to the resolved jit
+    backend (scan re-expression or Pallas kernel mode)."""
+    if _select_backend(graph, backend, objective="exact_k") == "pallas":
+        return _optimal_k_pallas(
+            graph, cost, n_bursts, q_max, objective, interpret=interpret
+        )
+    return _optimal_k_scan(graph, cost, n_bursts, q_max, objective)

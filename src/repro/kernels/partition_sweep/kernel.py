@@ -19,13 +19,32 @@ range and applies the three piecewise-constant updates in-register:
                                        · [i ≤ writer(p)]          (store freed)
     E⟨j,j⟩ = E_s + Σ E_r(p) + E_task(j) + S(j)
 
-then relaxes ``dp[q, j] = min_{i ≤ j, E⟨i,j⟩ ≤ Q[q]} dp[q, i-1] + E⟨i,j⟩``
-for every Q at once, tie-breaking the argmin to the smallest burst start.
-With ``slot_chunk=1`` (default) the slot loop replays numpy's exact
+then runs one of three DP combines over the same live column, selected by
+the **static** ``mode`` argument (each mode jit-caches its own lowered
+kernel — the paper's §4.3 sum DP and both §4.4 variants are all kernel
+modes now):
+
+* ``mode="sum"`` — ``dp[q, j] = min_{i ≤ j, E⟨i,j⟩ ≤ Q[q]} dp[q, i-1] +
+  E⟨i,j⟩`` for every Q at once (the lane axis is the Q grid);
+* ``mode="minimax"`` — the §4.4 storage minimization ``mm[j] = min_i
+  max(mm[i-1], E⟨i,j⟩)`` (one real lane, budget +inf — Q_min is
+  ``mns[n-1, 0]``);
+* ``mode="exact_k"`` — the fixed-burst-count DP ``dp[b, j] = min_{i,
+  E⟨i,j⟩ ≤ Q} combine(dp[b-1, i-1], E⟨i,j⟩)``: the lane axis carries the
+  burst count b = 0..K, so the K-indexed table tiles through the identical
+  slot-chunked column scan; the predecessor table is the previous column's
+  lanes shifted one lane right (lane 0 refills +inf). ``combine`` is ``+``
+  or ``max`` per the static ``combine_max`` flag (the pipeline-bottleneck
+  variant).
+
+Every mode tie-breaks its argmin to the smallest burst start. With
+``slot_chunk=1`` (default) the slot loop replays numpy's exact
 accumulation order, so the emitted column tables are bit-identical to
-:mod:`.ref` — and hence to the numpy DP oracle — including argmin
+:mod:`.ref` — and hence to the numpy DP oracles — including argmin
 tie-breaks; ``slot_chunk>1`` processes slots in vectorized chunks (one
-masked 2-D reduction per chunk, ~ulp drift, for TPU throughput).
+masked 2-D reduction per chunk, ~ulp drift, for TPU throughput; on exact
+dyadic-cost graphs the chunked reductions are still exact, which the tie
+audit pins across all three modes).
 
 Compiled-mode TPU use is float32 (f64 is interpret-only); the engine's
 differential guarantees are stated for the f64 interpret path, which is
@@ -50,7 +69,10 @@ from ...obs.metrics import METRICS
 # assert that serving-style loops re-dispatch the cached kernel instead of
 # re-tracing (see the enable_x64-hoist note in repro/core/partition_jax.py).
 # Registry-backed (repro.obs.metrics) but still a plain dict to consumers.
-TRACE_COUNT = METRICS.counter_dict("kernel.partition_sweep.trace_count", ("sweep_columns",))
+TRACE_COUNT = METRICS.counter_dict(
+    "kernel.partition_sweep.trace_count",
+    ("sweep_columns", "sweep_columns_minimax", "sweep_columns_exact_k"),
+)
 
 
 def _sweep_kernel(
@@ -75,6 +97,8 @@ def _sweep_kernel(
     tile: int,
     slot_chunk: int,
     dtype,
+    mode: str,
+    combine_max: bool,
 ):
     B, C = tile, slot_chunk
     j = pl.program_id(0) + np.int32(1)   # task / column index, 1..N
@@ -85,7 +109,12 @@ def _sweep_kernel(
     @pl.when((j == 1) & (t == 0))
     def _():
         dpbuf[...] = jnp.full(dpbuf.shape, jnp.inf, dtype)
-        dpbuf[0, :] = jnp.zeros((dpbuf.shape[1],), dtype)  # dp[q, 0] = 0
+        if mode == "exact_k":
+            # dp[b, 0]: the empty prefix is reachable with zero bursts only.
+            lane = lax.broadcasted_iota(jnp.int32, (dpbuf.shape[1],), 0)
+            dpbuf[0, :] = jnp.where(lane == 0, jnp.asarray(0.0, dtype), jnp.inf)
+        else:
+            dpbuf[0, :] = jnp.zeros((dpbuf.shape[1],), dtype)  # dp[q, 0] = 0
         colbuf[...] = jnp.zeros(colbuf.shape, dtype)
 
     i_vec = base + np.int32(1) + lax.broadcasted_iota(jnp.int32, (B, 1), 0)
@@ -156,7 +185,16 @@ def _sweep_kernel(
     # dp[q, i-1] for the tile's i values; rows ≥ j are still inf, so
     # beyond-diagonal candidates drop out automatically.
     dpt = dpbuf[pl.ds(base, B), :]
-    cand = dpt + jnp.where(colt <= budget_ref[...], colt, jnp.inf)
+    if mode == "exact_k":
+        # Lane b needs dp[b-1, i-1]: shift the burst-count axis one lane
+        # right; lane 0 (zero bursts covering a non-empty prefix) refills
+        # +inf, so the b=0 output row degenerates to an all-infeasible
+        # column (val inf, argmin 1) that callers never walk.
+        dpt = jnp.concatenate(
+            [jnp.full((B, 1), jnp.inf, dtype), dpt[:, :-1]], axis=1
+        )
+    masked = jnp.where(colt <= budget_ref[...], colt, jnp.inf)
+    cand = jnp.maximum(dpt, masked) if combine_max else dpt + masked
     tmin = jnp.min(cand, axis=0)                                  # (nq_pad,)
     # First i achieving the min (the sentinel never survives: inf == inf on
     # an all-infeasible column still selects i = 1, like numpy's argmin —
@@ -190,7 +228,8 @@ def _sweep_kernel(
 
 
 @functools.partial(
-    jax.jit, static_argnames=("tile", "slot_chunk", "interpret")
+    jax.jit,
+    static_argnames=("tile", "slot_chunk", "interpret", "mode", "combine_max"),
 )
 def sweep_columns_call(
     read_ptr,      # (N+1,)  i32
@@ -207,16 +246,25 @@ def sweep_columns_call(
     tile: int = 512,
     slot_chunk: int = 1,
     interpret: bool = True,
+    mode: str = "sum",
+    combine_max: bool = False,
 ):
     """Launch the sweep kernel: → (mns, bests), each ``(N, nq_pad)``.
 
-    Shapes are static per (N, nnz, nq_pad, tile, slot_chunk); jit caches the
-    lowered kernel so serving loops re-dispatch without re-tracing. Inputs
-    are taken in whatever float dtype ``e_task`` carries (float64 under
-    interpret mode — the differential-exact path — float32 for compiled
-    TPU).
+    Shapes are static per (N, nnz, nq_pad, tile, slot_chunk); the static
+    ``mode`` / ``combine_max`` pair selects the DP combine (see module
+    docstring) and keys the jit cache alongside them, so each objective
+    caches its own lowered kernel and serving loops re-dispatch without
+    re-tracing. The lane axis is the Q grid for ``mode="sum"``, a single
+    real lane for ``"minimax"`` (budget lane 0 = +inf), and the burst
+    count b = 0..K for ``"exact_k"`` (budget lanes 0..K = the single
+    scaled Q_max, -inf beyond). Inputs are taken in whatever float dtype
+    ``e_task`` carries (float64 under interpret mode — the
+    differential-exact path — float32 for compiled TPU).
     """
-    TRACE_COUNT["sweep_columns"] += 1
+    TRACE_COUNT[
+        "sweep_columns" if mode == "sum" else f"sweep_columns_{mode}"
+    ] += 1
     N = e_task.shape[0]
     nq_pad = budget.shape[0]
     dtype = e_task.dtype
@@ -234,7 +282,8 @@ def sweep_columns_call(
     vspec = lambda shape: pl.BlockSpec(shape, lambda j, t: (0,) * len(shape))
     sspec = pl.BlockSpec(memory_space=pltpu.SMEM)
     kern = functools.partial(
-        _sweep_kernel, n_tiles=T, tile=B, slot_chunk=C, dtype=dtype
+        _sweep_kernel, n_tiles=T, tile=B, slot_chunk=C, dtype=dtype,
+        mode=mode, combine_max=combine_max,
     )
     return pl.pallas_call(
         kern,

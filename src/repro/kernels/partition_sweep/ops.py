@@ -1,12 +1,15 @@
 """Host wrapper for the CSR sweep kernel: numpy in, numpy column tables out.
 
 ``sweep_columns`` is the kernel package's public entry point: it takes a
-:class:`repro.core.graph.GraphCSRArrays` export plus a cost model and a
-Q_max grid, prices the slots (the export itself is cost-model-independent),
-and launches :func:`.kernel.sweep_columns_call`. The engine
+:class:`repro.core.graph.GraphCSRArrays` export plus a cost model and an
+objective — a Q_max grid for ``"sum"``, nothing extra for ``"minimax"``,
+``(Q_max, n_bursts, k_objective)`` for ``"exact_k"`` — prices the slots
+(the export itself is cost-model-independent), and launches
+:func:`.kernel.sweep_columns_call` in the matching static mode. The engine
 (:mod:`repro.core.partition_jax`, ``backend="pallas"``) assembles the
-returned (mns, bests) into a :class:`~repro.core.partition_jax.JaxSweep`;
-tests compare them bit-for-bit against :func:`.ref.sweep_columns_ref`.
+returned (mns, bests) into a :class:`~repro.core.partition_jax.JaxSweep`
+(sum), a Q_min scalar (minimax), or an exact-K parent walk; tests compare
+them bit-for-bit against the :mod:`.ref` oracles.
 
 Serving-path notes (ROADMAP "hoist dtype handling"):
 
@@ -33,15 +36,24 @@ from ...core._cache import weak_id_cache
 from ...core.cost import CostModel
 from ...core.graph import GraphCSRArrays
 from .kernel import sweep_columns_call
-from .ref import (  # noqa: F401  (re-exported oracle)
+from .ref import (  # noqa: F401  (re-exported oracles)
     _ABS,
     _REL,
     slot_costs,
     store_add_ref,
+    sweep_columns_exactk_ref,
+    sweep_columns_minimax_ref,
     sweep_columns_ref,
 )
 
-__all__ = ["sweep_columns", "sweep_columns_ref", "slot_costs", "store_add_ref"]
+__all__ = [
+    "sweep_columns",
+    "sweep_columns_ref",
+    "sweep_columns_minimax_ref",
+    "sweep_columns_exactk_ref",
+    "slot_costs",
+    "store_add_ref",
+]
 
 
 def _needs_interpret() -> bool:
@@ -81,29 +93,72 @@ def sweep_columns(
     cost: CostModel,
     q_values: Sequence[Optional[float]],
     *,
+    objective: str = "sum",
+    n_bursts: Optional[int] = None,
+    k_objective: str = "sum",
     tile: int = 512,
     slot_chunk: int = 1,
     interpret: Optional[bool] = None,
 ) -> Tuple[np.ndarray, np.ndarray]:
-    """Solve one CSR export over a Q grid: → (mns, bests), each ``(N, nq)``.
+    """Solve one CSR export in one kernel mode: → (mns, bests) tables.
 
-    ``mns[j-1, q]`` is dp[q, j] (optimal cost of tasks 1..j under Q[q]),
-    ``bests[j-1, q]`` the start of the last burst achieving it (infeasible
-    columns carry ``inf`` in mns; bests are only meaningful where finite).
-    ``None`` Q values mean unbounded. ``interpret=None`` auto-selects
-    interpret mode on every non-TPU backend (float64,
-    differential-exact); compiled TPU mode runs float32.
+    ``objective="sum"`` (default) sweeps the Q grid: ``mns[j-1, q]`` is
+    dp[q, j] (optimal cost of tasks 1..j under Q[q]), ``bests[j-1, q]`` the
+    start of the last burst achieving it; tables are ``(N, nq)``.
+
+    ``objective="minimax"`` takes no Q grid (pass ``q_values=()``): tables
+    are ``(N, 1)`` with ``mns[j-1, 0] = mm[j]`` — Q_min is
+    ``mns[n_tasks-1, 0]``.
+
+    ``objective="exact_k"`` takes exactly one Q value (the single Q_max,
+    ``None`` for unbounded) plus ``n_bursts=K`` and ``k_objective``
+    ("sum" | "max"); tables are ``(N, K+1)`` with lane b = dp[b, j] /
+    parent — the layout of :func:`.ref.sweep_columns_exactk_ref`.
+
+    Infeasible entries carry ``inf`` in mns; bests are only meaningful
+    where finite. ``interpret=None`` auto-selects interpret mode on every
+    non-TPU backend (float64, differential-exact); compiled TPU mode runs
+    float32.
     """
     if interpret is None:
         interpret = _needs_interpret()
     dtype = np.float64 if interpret else np.float32
-    qs = np.array(
-        [np.inf if q is None else float(q) for q in q_values], dtype=np.float64
-    )
-    nq = qs.shape[0]
-    nq_pad = max(8, -(-nq // 8) * 8)
-    budget = np.full(nq_pad, -np.inf, dtype=np.float64)
-    budget[:nq] = qs * (1.0 + _REL) + _ABS
+
+    combine_max = False
+    if objective == "sum":
+        qs = np.array(
+            [np.inf if q is None else float(q) for q in q_values],
+            dtype=np.float64,
+        )
+        nq = qs.shape[0]
+        nq_pad = max(8, -(-nq // 8) * 8)
+        budget = np.full(nq_pad, -np.inf, dtype=np.float64)
+        budget[:nq] = qs * (1.0 + _REL) + _ABS
+    elif objective == "minimax":
+        if len(tuple(q_values)) != 0:
+            raise ValueError("objective='minimax' takes no Q grid")
+        combine_max = True
+        nq, nq_pad = 1, 8
+        # Lane 0 is the single unconstrained minimax lane; padding -inf.
+        budget = np.full(nq_pad, -np.inf, dtype=np.float64)
+        budget[0] = np.inf
+    elif objective == "exact_k":
+        qv = tuple(q_values)
+        if len(qv) != 1:
+            raise ValueError("objective='exact_k' takes exactly one Q_max")
+        if n_bursts is None or int(n_bursts) < 1:
+            raise ValueError("objective='exact_k' needs n_bursts >= 1")
+        if k_objective not in ("sum", "max"):
+            raise ValueError(f"unknown k_objective {k_objective!r}")
+        combine_max = k_objective == "max"
+        K = int(n_bursts)
+        q = np.inf if qv[0] is None else float(qv[0])
+        nq = K + 1  # lane axis is the burst count b = 0..K
+        nq_pad = max(8, -(-nq // 8) * 8)
+        budget = np.full(nq_pad, -np.inf, dtype=np.float64)
+        budget[:nq] = q * (1.0 + _REL) + _ABS
+    else:
+        raise ValueError(f"unknown kernel objective {objective!r}")
 
     with enable_x64(bool(interpret)):
         args = _device_slots(csr, cost, dtype)
@@ -113,5 +168,7 @@ def sweep_columns(
             tile=tile,
             slot_chunk=slot_chunk,
             interpret=bool(interpret),
+            mode=objective,
+            combine_max=combine_max,
         )
         return np.asarray(mns)[:, :nq], np.asarray(bests)[:, :nq]

@@ -50,7 +50,7 @@ from ..configs import resolve_config as _resolve_config
 from ..configs.base import ModelConfig
 from ..core.layer_profile import lower_config, profile_model, build_activation_graph
 from ..core.offload import OffloadPlan, price_offload_bounds
-from ..core.partition import Infeasible, q_min, whole_app_partition, within_budget
+from ..core.partition import Infeasible, whole_app_partition, within_budget
 from ..core.plan_table import (
     PlanTable,
     PlanTableError,
@@ -277,8 +277,20 @@ def derive_q_grid(graphs, cm, n_q: int = 16) -> List[Optional[float]]:
     """The standard offline Q grid for a bucket set: geometric from
     [min over buckets of Q_min, max whole-app E_total × 1.05] plus one
     unbounded entry, so every bucket has both fully-julienned and
-    single-cycle plans tabulated."""
-    lo = min(q_min(g, cm) for g in graphs)
+    single-cycle plans tabulated.
+
+    Q_min goes through the façade's minimax objective (``backend="auto"``),
+    so the build path picks the same registry backend — scan or the Pallas
+    kernel's minimax mode — that the rest of the table build uses, instead
+    of hardwiring the numpy DP (which would dense-walk graphs the registry
+    routes to the CSR kernel).
+    """
+    from ..api import PartitionSpec, solve  # lazy: avoid import cycle
+
+    lo = min(
+        solve(PartitionSpec(graph=g, cost=cm, objective="minimax")).q_min()
+        for g in graphs
+    )
     hi = max(whole_app_partition(g, cm).e_total * 1.05 for g in graphs)
     qs: List[Optional[float]] = list(np.geomspace(lo, max(hi, lo * 1.0001), n_q))
     qs.append(None)

@@ -130,7 +130,7 @@ def test_facade_matches_optimal_partition_k(arch, k_objective, arch_case):
 
     g, cm, qs = arch_case(arch)
     k = min(3, g.n_tasks)
-    for backend in ("numpy", "scan"):
+    for backend in ("numpy", "scan", "pallas"):
         sol = solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
                                   n_bursts=k, k_objective=k_objective,
                                   backend=backend))
@@ -143,11 +143,12 @@ def test_facade_matches_optimal_partition_k(arch, k_objective, arch_case):
 
 @pytest.mark.parametrize("arch", ARCHS)
 def test_facade_minimax_matches_q_min(arch, arch_case):
-    """objective='minimax' == the (non-deprecated) numpy q_min, on both the
-    numpy and scan backends, bit-for-bit."""
+    """objective='minimax' == the (non-deprecated) numpy q_min on every
+    backend — numpy, scan, and the Pallas kernel's minimax mode —
+    bit-for-bit."""
     g, cm, qs = arch_case(arch)
     ref = q_min(g, cm)
-    for backend in ("numpy", "scan"):
+    for backend in ("numpy", "scan", "pallas"):
         sol = solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
                                   backend=backend))
         assert sol.q_min() == ref, backend
@@ -330,25 +331,73 @@ def test_infeasible_sum_surfaces_identically(backend, sharding, tiny_case):
 
 
 @pytest.mark.parametrize("backend", ["numpy", "scan", "pallas"])
-def test_unsupported_objective_surfaces_identically(backend, tiny_case):
-    """minimax/exact_k run on numpy and scan and raise UnsupportedObjective
-    on pallas (sum-only until the §4.4 kernel mode lands)."""
+def test_objective_matrix_every_builtin_backend(backend, tiny_case):
+    """Every built-in backend implements all three objectives (the §4.4
+    combines are Pallas kernel modes now): minimax reproduces the numpy
+    q_min bit-for-bit and exact_k yields the requested burst count — no
+    code path raises UnsupportedObjective for a built-in backend."""
     g, cm = tiny_case
     ref_qmin = q_min(g, cm)
     for objective, extra in (("minimax", {}),
                              ("exact_k", {"n_bursts": 2})):
         spec = PartitionSpec(graph=g, cost=cm, objective=objective,
                              backend=backend, **extra)
-        if backend == "pallas":
-            with pytest.raises(UnsupportedObjective) as e:
-                solve(spec)
-            assert "'pallas'" in str(e.value) and objective in str(e.value)
-            continue
         sol = solve(spec)
         if objective == "minimax":
             assert sol.q_min() == ref_qmin
         else:
             assert sol.partition().n_bursts == 2
+
+
+def test_unsupported_objective_surfaces_identically(tiny_case):
+    """The UnsupportedObjective error path, pinned against a fake registered
+    backend with a restricted objectives flag (the built-in backends all
+    implement the full matrix now, so only capability flags can trip it)."""
+    g, cm = tiny_case
+    reg = {}
+
+    @register_backend("sumonly", objectives=("sum",), supports_dense=True,
+                      registry=reg)
+    class SumOnly:
+        name = "sumonly"
+
+        def solve(self, req):
+            raise AssertionError("capability check must reject pre-dispatch")
+
+    eng = Engine(reg)
+    for objective, extra in (("minimax", {}), ("exact_k", {"n_bursts": 2})):
+        spec = PartitionSpec(graph=g, cost=cm, objective=objective,
+                             backend="sumonly", **extra)
+        with pytest.raises(UnsupportedObjective) as e:
+            eng.solve(spec)
+        msg = str(e.value)
+        assert "'sumonly'" in msg and objective in msg
+        # the message names who *does* implement it — nobody, here
+        assert "implementing it: []" in msg
+    # auto resolution over a registry with no capable backend is the same
+    # typed error from the registry resolver
+    with pytest.raises(UnsupportedObjective):
+        eng.solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
+                                backend="auto"))
+
+
+def test_named_backend_dispatch_errors_distinguish_registration(tiny_case):
+    """resolve_jit_backend: an unknown name says 'unknown'; a registered but
+    non-jit-dispatchable name (numpy) says so and lists both name sets
+    instead of the old misleading 'unknown backend' message."""
+    from repro.core.engine import resolve_jit_backend
+
+    g, _ = tiny_case
+    with pytest.raises(SpecError) as e:
+        resolve_jit_backend(g, "numpy")
+    msg = str(e.value)
+    assert "registered but not jit-dispatchable" in msg
+    for name in ("numpy", "scan", "pallas"):
+        assert name in msg
+    with pytest.raises(SpecError) as e2:
+        resolve_jit_backend(g, "mosaic")
+    msg2 = str(e2.value)
+    assert "unknown backend 'mosaic'" in msg2 and "numpy" in msg2
 
 
 def test_sharding_requires_a_q_grid_objective(tiny_case):
@@ -387,11 +436,23 @@ def test_export_mismatch_is_typed_everywhere(tiny_case):
         assert isinstance(e.value, TypeError), (backend, type(export))
     with pytest.raises(ExportMismatch):
         solve(PartitionSpec(graph=object(), cost=cm, q_max=None))
-    # layout gaps beat objective gaps: scan *does* implement minimax, the
-    # CSR layout is what no minimax-capable backend consumes
+    # layout gaps beat objective gaps: in a registry where the only
+    # minimax-capable backend is dense-only, a CSR export is an export
+    # problem, not an objective problem (the global registry can't hit this
+    # branch anymore — pallas covers CSR for every objective)
+    reg = {}
+
+    @register_backend("denseonly", objectives=("sum", "minimax"),
+                      supports_dense=True, registry=reg)
+    class DenseOnly:
+        name = "denseonly"
+
+        def solve(self, req):
+            raise AssertionError("layout check must reject pre-dispatch")
+
     with pytest.raises(ExportMismatch):
-        solve(PartitionSpec(graph=g.to_csr_arrays(), cost=cm,
-                            objective="minimax"))
+        Engine(reg).solve(PartitionSpec(graph=g.to_csr_arrays(), cost=cm,
+                                        objective="minimax"))
     # exact_k prices bursts on the graph — exports are rejected up front
     # (before any solve), backend-independently
     from repro.core import partition_jax as pj
@@ -502,7 +563,8 @@ def test_registry_flags_and_names():
     assert backend_info("scan").supports_sharding
     assert not backend_info("scan").supports_csr
     assert backend_info("pallas").supports_csr
-    assert backend_info("pallas").objectives == frozenset({"sum"})
+    assert backend_info("pallas").objectives == \
+        frozenset({"sum", "minimax", "exact_k"})
     assert not backend_info("numpy").auto_eligible
     assert backend_info("numpy").objectives == \
         frozenset({"sum", "minimax", "exact_k"})

@@ -242,6 +242,65 @@ def test_from_json_rejects_tampered_stats(tmp_path):
         MeasuredCostTable.from_json(str(path))
 
 
+def _fingerprint_free_payload(**corrupt) -> dict:
+    """A to_payload dict with the fingerprint key *deleted* and the restore
+    stats entry overridden — the load path skips the fingerprint check when
+    the key is absent, so these corruptions used to sail straight through
+    into confidence pricing."""
+    mt = _stats_table(analytical_cost_model("time"), restore=[1e-5, 2e-5])
+    payload = mt.to_payload()
+    del payload["fingerprint"]
+    payload["stats"]["restore"].update(corrupt)
+    return payload
+
+
+def test_fingerprint_free_payload_loads_clean():
+    """Sanity: deleting the fingerprint alone is legitimate (hand-authored
+    tables) and must keep loading."""
+    back = MeasuredCostTable.from_payload(_fingerprint_free_payload())
+    assert back.stats["restore"].count == 2
+
+
+@pytest.mark.parametrize(
+    "corrupt, match",
+    [
+        ({"mean": float("nan")}, "non-finite"),
+        ({"mean": float("inf")}, "non-finite"),
+        ({"m2": float("-inf")}, "non-finite"),
+        ({"count": -3}, "negative count"),
+        ({"m2": -1e-9}, "negative m2"),
+        ({"count": 0}, "zero samples"),  # mean/m2 stay non-zero
+        ({"mean": "fast"}, "malformed"),
+        ({"count": None}, "malformed"),
+    ],
+)
+def test_load_rejects_invalid_stats_without_fingerprint(corrupt, match):
+    """Welford invariants are enforced on load even when the fingerprint
+    check cannot fire: NaN/inf moments, negative counts, negative variance
+    accumulators, and zero-sample entries with non-zero moments all raise
+    the typed CalibrationError."""
+    with pytest.raises(CalibrationError, match=match):
+        MeasuredCostTable.from_payload(_fingerprint_free_payload(**corrupt))
+
+
+def test_load_rejects_missing_stats_field():
+    payload = _fingerprint_free_payload()
+    del payload["stats"]["restore"]["m2"]
+    with pytest.raises(CalibrationError, match="malformed"):
+        MeasuredCostTable.from_payload(payload)
+
+
+def test_from_json_rejects_nan_mean_on_disk(tmp_path):
+    """End-to-end through the file loader: json serializes NaN as the
+    non-standard ``NaN`` literal, python's json reads it back, and from_json
+    must still refuse it."""
+    payload = _fingerprint_free_payload(mean=float("nan"))
+    path = tmp_path / "nan.json"
+    path.write_text(json.dumps(payload))
+    with pytest.raises(CalibrationError, match="non-finite"):
+        MeasuredCostTable.from_json(str(path))
+
+
 def test_from_ledger_json_rejects_non_ledger(tmp_path):
     path = tmp_path / "not_a_ledger.json"
     path.write_text(json.dumps({"rows": []}))

@@ -223,7 +223,8 @@ def test_extend_solves_only_new_cells(plan_grid):
     delta = {k: partition_jax.SOLVE_COUNT[k] - solves[k] for k in solves}
     assert delta == {"sweep_jax": 0, "sweep_jax_batched": 2,
                      "sweep_jax_sharded": 0, "q_min_scan": 0,
-                     "optimal_k_scan": 0}
+                     "optimal_k_scan": 0, "q_min_pallas": 0,
+                     "optimal_k_pallas": 0}
     _assert_tables_bitidentical(
         _strip_lineage(ext), _strip_lineage(fresh)
     )

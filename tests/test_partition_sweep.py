@@ -57,9 +57,15 @@ from repro.core.partition_jax import (
     sweep_jax_batched,
 )
 from repro.configs import REGISTRY
+from repro.api import PartitionSpec, solve
+from repro.core.partition import _optimal_k
 from repro.kernels.partition_sweep import kernel as sweep_kernel
 from repro.kernels.partition_sweep.ops import sweep_columns
-from repro.kernels.partition_sweep.ref import sweep_columns_ref
+from repro.kernels.partition_sweep.ref import (
+    sweep_columns_exactk_ref,
+    sweep_columns_minimax_ref,
+    sweep_columns_ref,
+)
 
 CM = PAPER_FRAM_MODEL
 
@@ -225,6 +231,154 @@ def test_kernel_chunked_slots_close_to_ref():
     assert (brt == bkt).all()
 
 
+# -- minimax / exact-K kernel modes (§4.4 objective matrix) -------------------
+
+
+def _exactk_bounds(bsts, n, n_bursts):
+    """The shared host parent walk over an exact-K (vals, bsts) table."""
+    bounds = []
+    j, b = n, n_bursts
+    while j > 0:
+        i = int(bsts[j - 1, b])
+        bounds.append((i, j))
+        j, b = i - 1, b - 1
+    bounds.reverse()
+    return bounds
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_minimax_ref_matches_numpy_qmin(seed):
+    """The minimax CSR oracle's mm[n] is bit-identical to the numpy q_min
+    (max/min combines are exact in float64)."""
+    g, cm, _ = _case(300 + seed)
+    mns, bests = sweep_columns_minimax_ref(g.to_csr_arrays(), cm)
+    assert mns[g.n_tasks - 1, 0] == q_min(g, cm), seed
+    assert (bests >= 1).all()
+
+
+@pytest.mark.parametrize("seed", range(20))
+def test_minimax_kernel_matches_ref_bitexact(seed):
+    """Pallas minimax mode (interpret, slot_chunk=1) is bit-identical to the
+    CSR oracle — mns AND argmin bests, every column."""
+    g, cm, _ = _case(300 + seed)
+    csr = g.to_csr_arrays()
+    mr, br = sweep_columns_minimax_ref(csr, cm)
+    mk, bk = sweep_columns(csr, cm, (), objective="minimax", interpret=True)
+    _assert_bitequal(mr, mk, seed)
+    assert (br == bk).all(), seed
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_exactk_ref_matches_numpy_dp(seed):
+    """The exact-K CSR oracle reconstructs the numpy _optimal_k partition —
+    bounds AND e_total — for both combines, feasible and infeasible Qs."""
+    g, cm, qs = _case(320 + seed)
+    n = g.n_tasks
+    csr = g.to_csr_arrays()
+    for K in sorted({1, max(1, n // 2), n}):
+        for kobj in ("sum", "max"):
+            for q in (None, qs[2]):
+                vals, bsts = sweep_columns_exactk_ref(csr, cm, q, K, kobj)
+                try:
+                    part = _optimal_k(g, cm, K, q, kobj)
+                except Infeasible:
+                    assert not np.isfinite(vals[n - 1, K]), (seed, K, kobj, q)
+                    continue
+                assert np.isfinite(vals[n - 1, K]), (seed, K, kobj, q)
+                assert _exactk_bounds(bsts, n, K) == part.bounds, \
+                    (seed, K, kobj, q)
+
+
+@pytest.mark.parametrize("kobj", ["sum", "max"])
+@pytest.mark.parametrize("seed", range(12))
+def test_exactk_kernel_matches_ref_bitexact(seed, kobj):
+    """Pallas exact_k mode (interpret, slot_chunk=1): the burst-count lane
+    axis reproduces the CSR oracle's (vals, bsts) bit-for-bit, including
+    the degenerate b=0 lane (inf, parent 1)."""
+    g, cm, qs = _case(320 + seed)
+    n = g.n_tasks
+    csr = g.to_csr_arrays()
+    for K in sorted({1, max(1, n // 2), n}):
+        for q in (None, qs[2]):
+            vr, br = sweep_columns_exactk_ref(csr, cm, q, K, kobj)
+            vk, bk = sweep_columns(
+                csr, cm, (q,), objective="exact_k", n_bursts=K,
+                k_objective=kobj, interpret=True,
+            )
+            _assert_bitequal(vr, vk, (seed, K, kobj, q))
+            assert (br == bk).all(), (seed, K, kobj, q)
+            _assert_bitequal(vr[:, 0], np.full(vr.shape[0], np.inf))
+            assert (br[:, 0] == 1).all()
+
+
+@pytest.mark.parametrize("tile", [8, 64])
+def test_objective_modes_tile_invariance(tile):
+    """Cross-tile combining in the minimax and exact-K modes keeps the
+    first-minimum rule under any i-tiling (the exact-K lane shift must not
+    interact with tile boundaries)."""
+    g, cm, qs = _tie_case(0)
+    csr = g.to_csr_arrays()
+    mr, br = sweep_columns_minimax_ref(csr, cm)
+    mk, bk = sweep_columns(
+        csr, cm, (), objective="minimax", tile=tile, interpret=True
+    )
+    _assert_bitequal(mr, mk, tile)
+    assert (br == bk).all(), tile
+    K = max(1, g.n_tasks // 2)
+    vr, brr = sweep_columns_exactk_ref(csr, cm, qs[2], K, "sum")
+    vk, bkk = sweep_columns(
+        csr, cm, (qs[2],), objective="exact_k", n_bursts=K, tile=tile,
+        interpret=True,
+    )
+    _assert_bitequal(vr, vk, tile)
+    assert (brr == bkk).all(), tile
+
+
+@pytest.mark.parametrize("backend", ["scan", "pallas"])
+def test_engine_objectives_match_numpy(backend):
+    """Engine.solve routes minimax/exact_k to the named jit backend and both
+    reproduce the numpy oracles (pallas bit-identically on every graph)."""
+    for seed in (5, 17, 23):
+        g, cm, qs = _case(340 + seed)
+        s = solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
+                                backend=backend))
+        assert s.q_min() == q_min(g, cm), (seed, backend)
+        K = max(1, g.n_tasks // 2)
+        for kobj in ("sum", "max"):
+            ref = _optimal_k(g, cm, K, None, kobj)
+            p = solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
+                                    n_bursts=K, k_objective=kobj,
+                                    backend=backend)).partition()
+            assert p.bounds == ref.bounds and p.e_total == ref.e_total, \
+                (seed, backend, kobj)
+
+
+def test_csr_export_minimax_routes_to_pallas():
+    """A GraphCSRArrays export now solves minimax under backend='auto' (it
+    used to be an ExportMismatch — no minimax-capable backend took CSR)."""
+    g, cm, _ = _case(6)
+    s = solve(PartitionSpec(graph=g.to_csr_arrays(), cost=cm,
+                            objective="minimax"))
+    assert s.backend == "pallas"
+    assert s.q_min() == q_min(g, cm)
+    assert partition_jax._select_backend(
+        g.to_csr_arrays(), "auto", objective="minimax") == "pallas"
+
+
+def test_zoo_config_objectives_pallas_matches_numpy():
+    """A lowered model-zoo graph (coalesced fractional weights) through the
+    minimax and exact-K kernel modes, bit-identical to numpy."""
+    cm = tpu_host_offload_model()
+    g = lower_config(REGISTRY["qwen1.5-0.5b"], batch=2, seq=256)
+    s = solve(PartitionSpec(graph=g, cost=cm, objective="minimax",
+                            backend="pallas"))
+    assert s.q_min() == q_min(g, cm)
+    ref = _optimal_k(g, cm, 4, None, "sum")
+    p = solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
+                            n_bursts=4, backend="pallas")).partition()
+    assert p.bounds == ref.bounds and p.e_total == ref.e_total
+
+
 # -- three-way exact-tie audit (ROADMAP) --------------------------------------
 
 
@@ -245,6 +399,39 @@ def test_tie_audit_numpy_scan_pallas(seed):
             continue
         assert scan.e_total[qi] == r.e_total == pall.e_total[qi], (seed, q)
         assert scan.bounds(qi) == r.bounds == pall.bounds(qi), (seed, q)
+
+
+@pytest.mark.parametrize("slot_chunk", [1, 4])
+@pytest.mark.parametrize("seed", range(12))
+def test_tie_audit_chunked_all_objectives(seed, slot_chunk):
+    """The exact-tie audit at both slot-loop modes, all three kernel
+    objectives: dyadic costs make even the chunked 2-D reductions exact, so
+    slot_chunk>1 must keep mns AND argmin bests bit-identical to the
+    oracles — not just ~ulp-close (this pins the chunked max/argmin
+    reduction's tie-breaks, which the slot_chunk=1 audit never exercised)."""
+    g, cm, qs = _tie_case(seed)
+    csr = g.to_csr_arrays()
+    mr, br = sweep_columns_ref(csr, cm, qs)
+    mk, bk = sweep_columns(csr, cm, qs, slot_chunk=slot_chunk, interpret=True)
+    _assert_bitequal(mr, mk, ("sum", seed, slot_chunk))
+    assert (br == bk).all(), ("sum", seed, slot_chunk)
+    mr2, br2 = sweep_columns_minimax_ref(csr, cm)
+    mk2, bk2 = sweep_columns(
+        csr, cm, (), objective="minimax", slot_chunk=slot_chunk,
+        interpret=True,
+    )
+    _assert_bitequal(mr2, mk2, ("minimax", seed, slot_chunk))
+    assert (br2 == bk2).all(), ("minimax", seed, slot_chunk)
+    K = max(1, g.n_tasks // 2)
+    for kobj in ("sum", "max"):
+        for q in (None, qs[2]):
+            vr, brr = sweep_columns_exactk_ref(csr, cm, q, K, kobj)
+            vk, bkk = sweep_columns(
+                csr, cm, (q,), objective="exact_k", n_bursts=K,
+                k_objective=kobj, slot_chunk=slot_chunk, interpret=True,
+            )
+            _assert_bitequal(vr, vk, ("exact_k", seed, slot_chunk, kobj, q))
+            assert (brr == bkk).all(), ("exact_k", seed, slot_chunk, kobj, q)
 
 
 # -- engine integration -------------------------------------------------------
@@ -434,3 +621,25 @@ def test_full_headcount_solves_through_csr_backend():
     for q, r_, p in zip(qs, ref, res.to_partitions(g, CM)):
         assert r_ is not None and p is not None
         assert p.e_total == r_.e_total and p.bounds == r_.bounds, q
+
+
+@pytest.mark.slow
+def test_full_headcount_minimax_exactk_pallas_vs_numpy():
+    """Objective-matrix acceptance on the unreduced 5458-task graph: the
+    kernel's minimax and exact-K modes are bit-identical to the numpy
+    q_min / _optimal_k oracles at full scale (the numpy side column-sweeps
+    the TaskGraph; the kernel side never materializes the dense export)."""
+    g = build_graph(THERMAL)
+    assert g.n_tasks == 5458
+
+    s = solve(PartitionSpec(graph=g, cost=CM, objective="minimax",
+                            backend="pallas"))
+    assert s.q_min() == q_min(g, CM)
+
+    # the paper's plan shape: exactly 18 bursts under the 132 mJ capacitor
+    ref = _optimal_k(g, CM, 18, 132e-3)
+    p = solve(PartitionSpec(graph=g, cost=CM, objective="exact_k",
+                            n_bursts=18, q_max=132e-3,
+                            backend="pallas")).partition()
+    assert p.bounds == ref.bounds and p.e_total == ref.e_total
+    assert p.n_bursts == 18
