@@ -975,6 +975,136 @@ def calibration_bench(smoke=False, json_out=None):
         raise SystemExit("calibration: " + "; ".join(failures))
 
 
+def placement_bench(smoke=False, json_out=None):
+    """Swarm placement grid solver (core/placement.py + placement_jax.py).
+
+    * solve pace: the whole bandwidth × memory × Q grid in ONE batched
+      engine call (cold = includes jit compile, warm = steady state);
+    * transfer overhead at the best cell of a memory-constrained swarm
+      (the NS-Optimizer-style figure: hop TX+RX over swarm E_total);
+    * ``placement.oracle_bit_identical`` as a hard gate: the scan backend
+      must reproduce the numpy reference on every DP array — values *and*
+      argmin parents — and every feasible plan must conserve energy
+      node-by-node. Nonzero exit on any mismatch.
+
+    Rows land in BENCH_placement.json.
+    """
+    import numpy as np
+
+    from repro.api import Engine, PartitionSpec, solve
+    from repro.core.layer_profile import default_cost_model
+    from repro.core.placement import (
+        LinkModel, NodeSpec, PlacementSpec, solve_placement_numpy,
+    )
+    from repro.core.placement_jax import solve_placement_scan
+
+    path = json_out or os.path.join(
+        os.path.dirname(__file__), "BENCH_placement.json")
+    records = {}
+
+    def row(name, value, derived=""):
+        _row(name, value, derived)
+        records[name] = {"value": value, "derived": derived}
+
+    cm = default_cost_model("time")
+    # an NS-Optimizer-shaped relay chain: enough layers that per-node NVM
+    # caps actually bite (the zoo smoke graphs are 2-6 fused tasks — too
+    # coarse to cut; scale is the point of this section)
+    from repro.core.graph import GraphBuilder
+
+    n_tasks = 24 if smoke else 64
+    b = GraphBuilder()
+    prev = None
+    for i in range(n_tasks):
+        pkt = f"act{i}"
+        b.packet(pkt, 50_000 + 10_000 * (i % 7), keep=(i == n_tasks - 1))
+        b.task(f"layer{i}", reads=(prev,) if prev else (), writes=(pkt,),
+               cost=0.01 + 0.002 * (i % 5))
+        prev = pkt
+    g = b.build()
+    qmin = solve(PartitionSpec(graph=g, cost=cm, objective="minimax")).q_min()
+    n_links = 8 if smoke else 25
+    bandwidths = [900.0 + 100.0 * i for i in range(n_links)]
+    # cap node NVM below the whole-graph footprint so the swarm must split
+    from repro.core.placement import placement_inputs
+
+    probe = placement_inputs(
+        g, cm, PlacementSpec(nodes=3, link=LinkModel(900.0)))
+    full_mem = float(probe.mem[1, g.n_tasks])
+    spec = PlacementSpec(
+        nodes=tuple(
+            NodeSpec(q_max=qmin * 1.25, memory_bytes=full_mem * 0.6)
+            for _ in range(3)
+        ),
+        links=tuple(LinkModel(bw) for bw in bandwidths),
+        q_scales=(0.9, 1.0, 1.2),
+    )
+    L, M, Z = spec.grid_shape
+
+    eng = Engine()
+    pspec = PartitionSpec(graph=g, cost=cm, placement=spec)
+    t0 = time.time()
+    sol = eng.solve(pspec)
+    t_cold = time.time() - t0
+    t0 = time.time()
+    sol = eng.solve(pspec)
+    t_warm = time.time() - t0
+    sweep = sol.placement_sweep()
+    cells = L * M * Z
+    row("placement.grid_cells", str(cells),
+        f"{L} links x {M} mem x {Z} Q, 3 nodes, {g.n_tasks} tasks")
+    row("placement.solve_cold_ms", f"{t_cold * 1e3:.1f}",
+        "one batched engine call incl. jit compile")
+    row("placement.solve_warm_ms", f"{t_warm * 1e3:.1f}",
+        f"{cells / max(t_warm, 1e-9):.0f} cells/s steady state")
+
+    feasible = [p for p in sweep.plans() if p is not None]
+    row("placement.feasible_cells", str(len(feasible)), f"of {cells}")
+    best = min(feasible, key=lambda p: p.e_total)
+    row("placement.transfer_overhead_pct",
+        f"{100 * best.transfer_overhead:.2f}",
+        f"best cell: {best.n_nodes_used} nodes @ "
+        f"{best.link.bandwidth_mbps:g} mbps, "
+        f"{best.transfer_bytes:.0f} B over {len(best.hop_boundaries)} hops")
+
+    # the hard gate: scan == numpy bitwise, ledgers conserve
+    ref = solve_placement_numpy(g, cm, spec)
+    got = solve_placement_scan(g, cm, spec)
+    identical = all(
+        np.array_equal(getattr(ref, f), getattr(got, f))
+        for f in ("e_total", "k_used", "outer_dp", "outer_parent",
+                  "inner_S", "inner_A")
+    )
+    conserved = True
+    for p in feasible:
+        try:
+            p.validate()
+            p.check_conservation()
+        except Exception:
+            conserved = False
+            break
+    row("placement.oracle_bit_identical", str(int(identical)),
+        "scan DP arrays == numpy reference bitwise; acceptance: ==1")
+    row("placement.ledger_conserved", str(int(conserved)),
+        f"{len(feasible)} feasible plans conserve node-by-node; "
+        f"acceptance: ==1")
+
+    _merge_bench_json(path, records, placement_smoke=bool(smoke))
+
+    failures = []
+    if not identical:
+        failures.append(
+            "scan backend diverged from the numpy placement oracle — "
+            "bit-identity (values and parents) is the backend contract")
+    if not conserved:
+        failures.append(
+            "a feasible placement plan failed per-node ledger conservation")
+    if not feasible:
+        failures.append("no feasible cell on the benchmark grid")
+    if failures:
+        raise SystemExit("placement: " + "; ".join(failures))
+
+
 def julienne_planners():
     from repro.configs import REGISTRY
     from repro.core.offload import min_activation_budget, plan_offload
@@ -1055,6 +1185,7 @@ SECTIONS = {
     "serving_traffic": serving_traffic,
     "telemetry_overhead": telemetry_overhead,
     "calibration": calibration_bench,
+    "placement": placement_bench,
     "planners": julienne_planners,
     "roofline": roofline_summary,
     "kernels": kernel_microbench,
@@ -1081,7 +1212,8 @@ def main(argv=None) -> None:
         if name == "partition_sweep":
             fn(backend=args.backend, smoke=args.smoke, json_out=args.json_out)
         elif name in ("plan_table", "plan_table_sharded", "api_facade",
-                      "serving_traffic", "telemetry_overhead", "calibration"):
+                      "serving_traffic", "telemetry_overhead", "calibration",
+                      "placement"):
             fn(smoke=args.smoke, json_out=args.json_out)
         else:
             fn()

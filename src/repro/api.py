@@ -18,6 +18,13 @@ Q-grid device sharding, numpy/scan/Pallas backends — goes through one call::
 
     # §4.4 / pipeline objectives are just another axis of the spec
     solve(PartitionSpec(graph=g, cost=cm, objective="minimax")).q_min()
+
+    # swarm placement: cut the chain across N harvesting nodes, sweeping
+    # link bandwidth × node memory × node budget in one batched call
+    sol = solve(PartitionSpec(graph=g, cost=cm, placement=PlacementSpec(
+        nodes=3, links=tuple(LinkModel(bandwidth_mbps=b)
+                             for b in range(900, 3400, 100)))))
+    sol.placement_plan(link_index=0).summary()
     solve(PartitionSpec(graph=g, cost=cm, objective="exact_k",
                         n_bursts=4, k_objective="max")).partition()
 
@@ -66,6 +73,15 @@ from .core.engine import (
     register_backend,
 )
 from .core.partition import Infeasible
+from .core.placement import (
+    LinkModel,
+    NodeSpec,
+    PlacementError,
+    PlacementPlan,
+    PlacementSpec,
+    PlacementSweep,
+    PlacementTable,
+)
 
 __all__ = [
     "OBJECTIVES",
@@ -76,8 +92,15 @@ __all__ = [
     "ExportMismatch",
     "Infeasible",
     "JulienningDeprecationWarning",
+    "LinkModel",
     "MeasuredCostTable",
+    "NodeSpec",
     "PartitionSpec",
+    "PlacementError",
+    "PlacementPlan",
+    "PlacementSpec",
+    "PlacementSweep",
+    "PlacementTable",
     "QGridSharding",
     "Solution",
     "SpecError",

@@ -69,6 +69,19 @@ from .partition import (
     whole_app_partition,
     within_budget,
 )
+from .placement import (
+    PLACEMENT_TABLE_VERSION,
+    LinkModel,
+    NodeSpec,
+    PlacementError,
+    PlacementPlan,
+    PlacementSpec,
+    PlacementSweep,
+    PlacementTable,
+    exhaustive_placement,
+    placement_inputs,
+    solve_placement_numpy,
+)
 from .plan_table import (
     PLAN_TABLE_VERSION,
     PlanTable,

@@ -129,6 +129,33 @@ class KernelStats:
         """Coefficient of variation; 0.0 when unsampled or mean-free."""
         return self.std / abs(self.mean) if self.count and self.mean else 0.0
 
+    def merge(self, other: "KernelStats") -> "KernelStats":
+        """Chan's parallel Welford combine of two (count, mean, m2) triples.
+
+        Exact contract: counts add exactly; an empty side returns the other
+        side's moments bitwise; and merging accumulators whose means agree
+        bitwise keeps that mean bitwise (``delta == 0.0``) — so fleets of
+        devices that measured identical draws merge to the identical table,
+        fingerprint included. For differing means the result equals
+        sequential ingestion of the concatenated samples mathematically
+        (pinned to ~ulp by the differential test), not bitwise — summation
+        order is part of Welford's rounding.
+        """
+        if not isinstance(other, KernelStats):
+            raise CalibrationError(
+                f"merge takes a KernelStats, got {type(other).__name__}"
+            )
+        na, nb = self.count, other.count
+        if nb == 0:
+            return KernelStats(count=na, mean=self.mean, m2=self.m2)
+        if na == 0:
+            return KernelStats(count=nb, mean=other.mean, m2=other.m2)
+        n = na + nb
+        delta = other.mean - self.mean
+        mean = self.mean + delta * (nb / n)
+        m2 = self.m2 + other.m2 + delta * delta * (na * (nb / n))
+        return KernelStats(count=n, mean=mean, m2=m2)
+
     def to_dict(self) -> Dict[str, object]:
         # float64 repr round-trips bitwise through json in Python 3
         return {"count": self.count, "mean": self.mean, "m2": self.m2}
@@ -264,6 +291,73 @@ class MeasuredCostTable:
         )
         table.ingest_rows(payload["entries"])
         return table
+
+    # -- multi-host aggregation --------------------------------------------
+
+    @classmethod
+    def merge(
+        cls,
+        *tables: "MeasuredCostTable",
+        meta: Optional[Mapping[str, object]] = None,
+    ) -> "MeasuredCostTable":
+        """Merge per-device tables into one fleet table (ROADMAP multi-host
+        profile aggregation): weighted Welford combine of every category's
+        (count, mean, m2) via :meth:`KernelStats.merge`, left to right in
+        argument order.
+
+        All tables must share the ``kind`` and the exact base CostModel
+        scalars — merging profiles calibrated against different analytical
+        models is a typed error, not an average. Per-device provenance is
+        recorded in the result's meta under ``"merged_from"`` (each source's
+        fingerprint, sample count, and meta — device identity rides in the
+        meta each ledger dump carried) and therefore lands in
+        :meth:`to_payload`. A single-table merge reproduces that table's
+        statistics bitwise.
+        """
+        if not tables:
+            raise CalibrationError("merge needs at least one table")
+        for t in tables:
+            if not isinstance(t, MeasuredCostTable):
+                raise CalibrationError(
+                    f"merge takes MeasuredCostTable arguments, got "
+                    f"{type(t).__name__}"
+                )
+        head = tables[0]
+        ref = [float(x) for x in cost_scalars(head.base)]
+        for t in tables[1:]:
+            if t.kind != head.kind:
+                raise CalibrationError(
+                    f"cannot merge kind={t.kind!r} into kind={head.kind!r}: "
+                    f"profiles of different graph kinds measure different "
+                    f"quantities"
+                )
+            if (
+                [float(x) for x in cost_scalars(t.base)] != ref
+                or t.base.name != head.base.name
+            ):
+                raise CalibrationError(
+                    f"cannot merge tables calibrated against different base "
+                    f"models ({t.base.name!r} vs {head.base.name!r}): the "
+                    f"merged statistics would price against neither"
+                )
+        out = cls(head.base, head.kind, meta=meta)
+        for category in CATEGORIES:
+            s = KernelStats()
+            for t in tables:
+                s = s.merge(t.stats[category])
+            out.stats[category] = s
+        out.meta.setdefault(
+            "merged_from",
+            [
+                {
+                    "fingerprint": t.fingerprint(),
+                    "n_samples": t.n_samples,
+                    "meta": dict(t.meta),
+                }
+                for t in tables
+            ],
+        )
+        return out
 
     # -- identity ----------------------------------------------------------
 

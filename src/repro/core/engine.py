@@ -52,6 +52,7 @@ from .graph import (
     dense_export_nbytes,
 )
 from .partition import Infeasible, Partition
+from .placement import PlacementSpec
 
 __all__ = [
     "EngineError",
@@ -124,8 +125,10 @@ class BackendInfo:
     ``supports_dense`` / ``supports_csr`` declare which *export* layouts it
     consumes (every backend accepts a :class:`TaskGraph` and converts it
     itself); ``supports_sharding`` gates :class:`QGridSharding`;
-    ``auto_eligible`` marks jit backends that ``backend="auto"`` may pick
-    (the numpy reference path is explicit-only).
+    ``supports_placement`` gates the multi-node placement axis
+    (``placement=PlacementSpec(...)``); ``auto_eligible`` marks jit backends
+    that ``backend="auto"`` may pick (the numpy reference path is
+    explicit-only).
     """
 
     name: str
@@ -134,6 +137,7 @@ class BackendInfo:
     supports_sharding: bool = False
     supports_csr: bool = False
     supports_dense: bool = True
+    supports_placement: bool = False
     auto_eligible: bool = True
 
 
@@ -147,6 +151,7 @@ def register_backend(
     supports_sharding: bool = False,
     supports_csr: bool = False,
     supports_dense: bool = True,
+    supports_placement: bool = False,
     auto_eligible: bool = True,
     registry: Optional[Dict[str, BackendInfo]] = None,
 ):
@@ -167,6 +172,7 @@ def register_backend(
             supports_sharding=supports_sharding,
             supports_csr=supports_csr,
             supports_dense=supports_dense,
+            supports_placement=supports_placement,
             auto_eligible=auto_eligible,
         )
         return cls
@@ -367,6 +373,15 @@ class PartitionSpec:
     ``backend`` names a registered backend or ``"auto"``; ``sharding``
     spreads the Q grid over a device mesh; ``interpret`` is forwarded to the
     Pallas kernel.
+
+    ``placement`` adds the multi-node axis (ROADMAP "multi-device
+    placement"): a :class:`repro.core.placement.PlacementSpec` describing a
+    relay chain of harvesting nodes plus the link-bandwidth / memory / Q
+    sweep grids. Placement solves carry their own budget axes, so
+    ``q_grid=`` / ``q_max=`` / ``sharding=`` are rejected alongside it, the
+    objective must stay ``"sum"`` (the placement DP minimizes swarm
+    E_total), and inputs must be :class:`TaskGraph` objects (the per-node
+    column sweeps walk the graph structure).
     """
 
     graph: Optional[AnyExport] = None
@@ -385,6 +400,7 @@ class PartitionSpec:
     sharding: Optional[QGridSharding] = None
     interpret: Optional[bool] = None
     confidence: Optional[float] = None
+    placement: Optional[PlacementSpec] = None
 
     def __post_init__(self):
         sources = [
@@ -461,6 +477,29 @@ class PartitionSpec:
                 f"MeasuredCostTable (anything with .cost_model(confidence)), "
                 f"got {type(self.cost).__name__}"
             )
+        if self.placement is not None:
+            if not isinstance(self.placement, PlacementSpec):
+                raise SpecError(
+                    f"placement= must be a PlacementSpec, got "
+                    f"{type(self.placement).__name__}"
+                )
+            if self.objective != "sum":
+                raise SpecError(
+                    f"placement= solves the multi-node E_total DP, which "
+                    f"rides objective='sum'; objective="
+                    f"{self.objective!r} has no placement form"
+                )
+            if self.q_grid is not None or self.q_max is not _UNSET:
+                raise SpecError(
+                    "placement= sweeps per-node budgets via "
+                    "PlacementSpec.q_scales (each node's q_max × the scale "
+                    "grid); drop q_grid=/q_max="
+                )
+            if self.sharding is not None:
+                raise SpecError(
+                    "placement= has no Q grid to shard (its grid axes are "
+                    "links × memory_scales × q_scales); drop sharding="
+                )
         if self.confidence is not None:
             try:
                 c = float(self.confidence)
@@ -519,6 +558,7 @@ class Solution:
     sweeps: Optional[Tuple[Any, ...]] = None      # JaxSweep per graph (sum, jit)
     parts: Optional[Tuple[Tuple[Optional[Partition], ...], ...]] = None
     qmins: Optional[Tuple[float, ...]] = None     # minimax
+    placements: Optional[Tuple[Any, ...]] = None  # PlacementSweep per graph
 
     @property
     def n_graphs(self) -> int:
@@ -576,6 +616,27 @@ class Solution:
             )
         return p
 
+    def placement_sweep(self, graph_index: int = 0):
+        """The solved :class:`~repro.core.placement.PlacementSweep` for one
+        graph (specs with ``placement=``): the full links × memory × Q grid
+        plus the raw DP tables the bit-identity gates compare."""
+        return self._one(self.placements, "placement sweeps")[graph_index]
+
+    def placement_plan(
+        self,
+        graph_index: int = 0,
+        link_index: int = 0,
+        memory_index: int = 0,
+        q_index: int = 0,
+    ):
+        """One grid cell materialized as a
+        :class:`~repro.core.placement.PlacementPlan` (spans, per-node burst
+        schedules, hop costs); raises
+        :class:`~repro.core.placement.PlacementError` where infeasible."""
+        return self.placement_sweep(graph_index).plan(
+            link_index, memory_index, q_index
+        )
+
     def q_min(self, graph_index: int = 0) -> float:
         """The §4.4 storage minimum for one graph (objective='minimax')."""
         return self._one(self.qmins, "Q_min values")[graph_index]
@@ -619,6 +680,7 @@ class _SolveRequest:
     interpret: Optional[bool]
     batched: bool
     backend: str                 # concrete name, or "auto" for a mixed batch
+    placement: Optional[PlacementSpec] = None
 
 
 @register_backend(
@@ -627,6 +689,7 @@ class _SolveRequest:
     supports_sharding=False,
     supports_csr=False,
     supports_dense=False,        # the reference DP walks the TaskGraph itself
+    supports_placement=True,
     auto_eligible=False,
 )
 class NumpyBackend:
@@ -643,6 +706,15 @@ class NumpyBackend:
     def solve(self, req: _SolveRequest) -> dict:
         from .partition import _optimal_k, _optimal_multi, q_min
 
+        if req.placement is not None:
+            from .placement import solve_placement_numpy
+
+            return {
+                "placements": tuple(
+                    solve_placement_numpy(g, req.cost, req.placement)
+                    for g in req.graphs
+                )
+            }
         if req.objective == "sum":
             return {
                 "parts": tuple(
@@ -684,6 +756,15 @@ class _JitBackend:
     def solve(self, req: _SolveRequest) -> dict:
         from . import partition_jax as pj
 
+        if req.placement is not None:
+            from .placement_jax import solve_placement_scan
+
+            return {
+                "placements": tuple(
+                    solve_placement_scan(g, req.cost, req.placement)
+                    for g in req.graphs
+                )
+            }
         if req.objective == "sum":
             qs = list(req.q_values)
             if req.sharding is not None:
@@ -744,6 +825,7 @@ class _JitBackend:
     supports_sharding=True,
     supports_csr=False,
     supports_dense=True,
+    supports_placement=True,     # the one-jit grid solver in placement_jax
 )
 class ScanBackend(_JitBackend):
     """The jitted ``lax.scan`` engine over dense :class:`GraphArrays`
@@ -854,6 +936,23 @@ class Engine:
         if spec.backend != "auto":
             info = backend_info(spec.backend, self._registry)
             return info.name, [info.name] * len(graphs)
+        if spec.placement is not None:
+            # auto for placement: the first auto-eligible backend declaring
+            # supports_placement (the scan grid solver in the default
+            # registry) — the layout-based routing below is about per-graph
+            # exports, which placement solves don't take
+            cands = [
+                b.name
+                for b in self._registry.values()
+                if b.auto_eligible and b.supports_placement
+            ]
+            if not cands:
+                raise SpecError(
+                    "no registered auto-eligible backend supports placement "
+                    "solves; pass backend='numpy' or register one with "
+                    "supports_placement"
+                )
+            return cands[0], [cands[0]] * len(graphs)
         per_graph = [
             resolve_jit_backend(g, "auto", spec.objective, self._registry)
             for g in graphs
@@ -889,6 +988,22 @@ class Engine:
                     f"sharding; use a backend registered with "
                     f"supports_sharding"
                 )
+            if spec.placement is not None and not info.supports_placement:
+                raise SpecError(
+                    f"backend {info.name!r} does not implement placement "
+                    f"solves; backends with supports_placement: "
+                    f"{sorted(b.name for b in self._registry.values() if b.supports_placement)}"
+                )
+        if spec.placement is not None:
+            # backend-independent: the per-node column sweeps walk the graph
+            # structure, so placement consumes TaskGraphs only
+            for g in graphs:
+                if not isinstance(g, TaskGraph):
+                    raise ExportMismatch(
+                        "placement= needs the TaskGraph (the per-node "
+                        "column sweeps walk its structure); pass the graph "
+                        "rather than a pre-exported layout"
+                    )
         if spec.objective == "exact_k":
             # backend-independent: reconstructed bursts are priced on the
             # graph, so exact_k consumes TaskGraphs only — reject here, not
@@ -915,6 +1030,7 @@ class Engine:
             interpret=spec.interpret,
             batched=spec.batched,
             backend="auto" if "+" in label else per_graph[0],
+            placement=spec.placement,
         )
         with TRACER.span(
             "engine.solve",

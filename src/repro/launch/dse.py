@@ -35,6 +35,11 @@ CLI::
     # drift probe of the tabulated plans against the refreshed profile
     python -m repro.launch.dse --arch qwen3-4b --calibrate ledger.json \
         --out plan_qwen.npz --probe 4
+
+    # swarm placement DSE: sweep link bandwidths × per-node budgets across a
+    # relay chain in one batched solve, into a versioned placement table
+    python -m repro.launch.dse --arch qwen3-4b --placement --nodes 3 \
+        --bandwidths 900:3400:100 --out placement_qwen.json
 """
 
 from __future__ import annotations
@@ -58,9 +63,11 @@ from .mesh import shard_devices
 from .planner import _parse_buckets, derive_q_grid, lower_buckets, resolve_config
 
 __all__ = [
+    "build_placement_table_for_arch",
     "build_sharded_table_for_arch",
     "calibrate_table",
     "extend_for_arch",
+    "parse_bandwidths",
     "probe_table",
 ]
 
@@ -153,6 +160,90 @@ def calibrate_table(
     return measured
 
 
+def parse_bandwidths(text: str) -> List[float]:
+    """``"900:3400:100"`` (start:stop:step, stop exclusive — the NS
+    Optimizer sweep convention) or a comma list ``"900,1800,3400"``."""
+    text = text.strip()
+    if ":" in text:
+        parts = text.split(":")
+        if len(parts) not in (2, 3):
+            raise ValueError(
+                f"bandwidth range is start:stop[:step], got {text!r}"
+            )
+        start, stop = float(parts[0]), float(parts[1])
+        step = float(parts[2]) if len(parts) == 3 else 100.0
+        if step <= 0 or stop <= start:
+            raise ValueError(f"empty bandwidth range {text!r}")
+        out = []
+        v = start
+        while v < stop:
+            out.append(v)
+            v += step
+        return out
+    vals = [float(p) for p in text.split(",") if p.strip()]
+    if not vals:
+        raise ValueError(f"no bandwidths in {text!r}")
+    return vals
+
+
+def build_placement_table_for_arch(
+    arch: str,
+    bucket: Tuple[int, int],
+    *,
+    n_nodes: int = 3,
+    bandwidths_mbps: Sequence[float] = (),
+    node_q: Optional[float] = None,
+    node_memory: Optional[float] = None,
+    q_scales: Sequence[float] = (1.0,),
+    memory_scales: Sequence[float] = (1.0,),
+    smoke: bool = True,
+    kind: str = "time",
+    backend: str = "auto",
+):
+    """Solve one arch bucket's placement grid (links × memory × Q) in one
+    batched façade call and wrap it as a versioned
+    :class:`~repro.core.placement.PlacementTable`.
+
+    ``node_q=None`` derives the per-node burst budget from the graph: the
+    §4.4 storage minimum Q_min × 1.25 — enough headroom that a single node
+    stays feasible while tight enough that the budget axis bites.
+    """
+    from ..api import Engine, PartitionSpec
+    from ..core.placement import LinkModel, NodeSpec, PlacementSpec, PlacementTable
+
+    cfg = resolve_config(arch, smoke)
+    cm = _default_cost(kind)
+    graph = lower_buckets(cfg, [tuple(bucket)], kind)[0]
+    if node_q is None:
+        qmin = Engine().solve(
+            PartitionSpec(graph=graph, cost=cm, objective="minimax")
+        ).q_min()
+        node_q = qmin * 1.25
+    pspec = PlacementSpec(
+        nodes=tuple(
+            NodeSpec(q_max=float(node_q), memory_bytes=node_memory)
+            for _ in range(int(n_nodes))
+        ),
+        links=tuple(LinkModel(bandwidth_mbps=float(b)) for b in bandwidths_mbps),
+        q_scales=tuple(q_scales),
+        memory_scales=tuple(memory_scales),
+    )
+    sol = Engine().solve(
+        PartitionSpec(graph=graph, cost=cm, placement=pspec, backend=backend)
+    )
+    return PlacementTable(
+        sol.placement_sweep(),
+        meta={
+            "arch": arch,
+            "bucket": list(bucket),
+            "kind": kind,
+            "smoke": bool(smoke),
+            "backend": sol.backend,
+            "node_q": float(node_q),
+        },
+    )
+
+
 def _parse_q_list(text: str) -> List[float]:
     return [float(part) for part in text.split(",") if part.strip()]
 
@@ -195,6 +286,32 @@ def main(argv=None) -> int:
     ap.add_argument("--drift-tol", type=float, default=0.05,
                     help="relative per-cycle drift tolerance for the "
                     "calibration probe (default 0.05)")
+    ap.add_argument("--placement", action="store_true",
+                    help="swarm placement DSE: solve the bandwidth × memory "
+                    "× Q placement grid for the first --buckets shape across "
+                    "--nodes relay nodes in one batched call, writing a "
+                    "versioned placement table JSON to --out")
+    ap.add_argument("--nodes", type=int, default=3,
+                    help="relay-chain length for --placement (default 3)")
+    ap.add_argument("--bandwidths", default="900:3400:100",
+                    help="link sweep for --placement: start:stop[:step] mbps "
+                    "(stop exclusive, NS Optimizer convention) or a comma "
+                    "list (default 900:3400:100)")
+    ap.add_argument("--node-q", type=float, default=None,
+                    help="per-node burst budget for --placement (default: "
+                    "the graph's Q_min × 1.25)")
+    ap.add_argument("--node-memory", type=float, default=None,
+                    help="per-node NVM bytes for --placement (default "
+                    "unbounded)")
+    ap.add_argument("--q-scales", default="1.0",
+                    help="comma-separated node-budget multipliers "
+                    "(--placement Q axis)")
+    ap.add_argument("--memory-scales", default="1.0",
+                    help="comma-separated node-memory multipliers "
+                    "(--placement memory axis)")
+    ap.add_argument("--backend", default="auto",
+                    help="solver backend for --placement (auto → the "
+                    "batched scan grid solver)")
     ap.add_argument("--seed", type=int, default=0, help="probe cell RNG seed")
     ap.add_argument("--out", required=True, help="table .npz path")
     ap.add_argument("--full", action="store_true",
@@ -219,6 +336,9 @@ def main(argv=None) -> int:
                      "not valid with --extend/--probe-only/--calibrate")
     if args.calibrate and (args.extend or args.probe_only):
         ap.error("--calibrate is its own mode; drop --extend/--probe-only")
+    if args.placement and (args.extend or args.probe_only or args.calibrate):
+        ap.error("--placement is its own mode; drop "
+                 "--extend/--probe-only/--calibrate")
     def _flush_telemetry() -> None:
         if args.trace_out:
             n_ev = TRACER.write(args.trace_out)
@@ -227,6 +347,26 @@ def main(argv=None) -> int:
             METRICS.dump_json(args.metrics_out, tool="dse", arch=args.arch)
             print(f"[dse] wrote metrics snapshot to {args.metrics_out}")
 
+    if args.placement:
+        t0 = time.time()
+        table = build_placement_table_for_arch(
+            args.arch, buckets[0],
+            n_nodes=args.nodes,
+            bandwidths_mbps=parse_bandwidths(args.bandwidths),
+            node_q=args.node_q,
+            node_memory=args.node_memory,
+            q_scales=_parse_q_list(args.q_scales),
+            memory_scales=_parse_q_list(args.memory_scales),
+            smoke=smoke, kind=args.kind or "time", backend=args.backend,
+        )
+        table.to_json(args.out)
+        dt = time.time() - t0
+        print(f"[dse] solved {table.summary()} in {dt:.2f}s → {args.out}")
+        L, M, Z = table.grid_shape
+        print(f"[dse]   grid: {L} links × {M} memory × {Z} Q "
+              f"({args.nodes} nodes, node_q={table.meta['node_q']:.4g})")
+        _flush_telemetry()
+        return 0
     if args.probe_only:
         n = probe_table(args.out, args.arch, k=args.probe or None,
                         seed=args.seed, smoke=smoke)

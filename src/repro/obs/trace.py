@@ -33,24 +33,35 @@ __all__ = [
     "PID_TRAFFIC",
     "PID_SOLVER",
     "PID_RUNTIME",
+    "PID_SWARM",
     "TID_SCHEDULER",
     "TID_HARVEST",
     "request_tid",
+    "node_tid",
 ]
 
 # Track layout shared by all instrumented call sites. Request tracks are
-# allocated as TID_REQUEST_BASE + rid (see request_tid).
+# allocated as TID_REQUEST_BASE + rid (see request_tid); swarm node tracks
+# as TID_NODE_BASE + node index (see node_tid) on the swarm pid.
 PID_TRAFFIC = 1
 PID_SOLVER = 2
 PID_RUNTIME = 3
+PID_SWARM = 4
 TID_SCHEDULER = 0
 TID_HARVEST = 1
 TID_REQUEST_BASE = 100
+TID_NODE_BASE = 200
 
 
 def request_tid(rid: int) -> int:
     """Perfetto thread id for request ``rid``'s per-request track."""
     return TID_REQUEST_BASE + int(rid)
+
+
+def node_tid(node: int) -> int:
+    """Perfetto thread id for swarm node ``node``'s per-node track
+    (one track per harvesting device on the :data:`PID_SWARM` process)."""
+    return TID_NODE_BASE + int(node)
 
 
 class _NullSpan:

@@ -936,3 +936,128 @@ else:
 
     def test_calibration_fuzz_skipped_without_hypothesis():
         pytest.importorskip("hypothesis")
+
+
+# ---------------------------------------------------------------------------
+# Multi-host aggregation: MeasuredCostTable.merge (ISSUE 10 satellite)
+# ---------------------------------------------------------------------------
+
+
+def test_kernel_stats_merge_matches_sequential_ingest():
+    """Chan's combine == sequential Welford over the concatenation: counts
+    exact, moments to ~ulp (summation order is part of Welford rounding)."""
+    rng = random.Random(21)
+    for _ in range(30):
+        xs = [rng.uniform(1e-6, 5.0) for _ in range(rng.randint(0, 40))]
+        ys = [rng.uniform(1e-6, 5.0) for _ in range(rng.randint(0, 40))]
+        a, b, ref = KernelStats(), KernelStats(), KernelStats()
+        for x in xs:
+            a.add(x)
+        for y in ys:
+            b.add(y)
+        for v in xs + ys:
+            ref.add(v)
+        m = a.merge(b)
+        assert m.count == ref.count
+        if ref.count:
+            assert m.mean == pytest.approx(ref.mean, rel=1e-12)
+            assert m.m2 == pytest.approx(ref.m2, rel=1e-9, abs=1e-15)
+
+
+def test_kernel_stats_merge_empty_side_is_bitwise():
+    s = KernelStats()
+    for x in (0.3, 1.7, 0.9):
+        s.add(x)
+    for merged in (s.merge(KernelStats()), KernelStats().merge(s)):
+        assert (merged.count, merged.mean, merged.m2) == (s.count, s.mean, s.m2)
+
+
+def test_kernel_stats_merge_identical_means_stay_bitwise():
+    # delta == 0.0 → the shared mean survives bitwise and m2 adds exactly
+    x = 2.0 ** -17 * 3.0
+    a, b = KernelStats(), KernelStats()
+    for _ in range(11):
+        a.add(x)
+    for _ in range(5):
+        b.add(x)
+    m = a.merge(b)
+    assert m.mean == x and m.m2 == 0.0 and m.count == 16
+
+
+def test_kernel_stats_merge_rejects_non_stats():
+    with pytest.raises(CalibrationError):
+        KernelStats().merge("nope")
+
+
+def _rows_from(rng, n):
+    cats = ("restore", "compute", "commit", "replay")
+    return [
+        {"category": rng.choice(cats), "energy": rng.uniform(1e-6, 2.0)}
+        for _ in range(n)
+    ]
+
+
+def test_measured_table_merge_differential_vs_concatenated_ingest():
+    """merge(per-device tables) == one table ingesting the concatenated rows
+    (counts exact, moments ~ulp) — the multi-host aggregation contract."""
+    rng = random.Random(33)
+    base = analytical_cost_model("time")
+    chunks = [_rows_from(rng, rng.randint(0, 25)) for _ in range(4)]
+    parts = []
+    for d, chunk in enumerate(chunks):
+        t = MeasuredCostTable(base, "time", meta={"device": f"dev{d}"})
+        t.ingest_rows(chunk)
+        parts.append(t)
+    merged = MeasuredCostTable.merge(*parts)
+    ref = MeasuredCostTable(base, "time")
+    ref.ingest_rows([r for chunk in chunks for r in chunk])
+    assert merged.n_samples == ref.n_samples
+    for cat in CATEGORIES:
+        ms, rs = merged.stats[cat], ref.stats[cat]
+        assert ms.count == rs.count
+        if rs.count:
+            assert ms.mean == pytest.approx(rs.mean, rel=1e-12)
+            assert ms.m2 == pytest.approx(rs.m2, rel=1e-9, abs=1e-15)
+    # per-device provenance rides in meta → to_payload
+    prov = merged.meta["merged_from"]
+    assert [p["meta"].get("device") for p in prov] == [
+        "dev0", "dev1", "dev2", "dev3"
+    ]
+    assert [p["fingerprint"] for p in prov] == [t.fingerprint() for t in parts]
+    assert sum(p["n_samples"] for p in prov) == merged.n_samples
+    assert merged.to_payload()["meta"]["merged_from"] == prov
+
+
+def test_measured_table_merge_single_table_is_bitwise():
+    rng = random.Random(8)
+    base = analytical_cost_model("time")
+    t = MeasuredCostTable(base, "time")
+    t.ingest_rows(_rows_from(rng, 17))
+    m = MeasuredCostTable.merge(t)
+    assert m.fingerprint() == t.fingerprint()  # stats bitwise-identical
+
+
+def test_measured_table_merge_identical_fleet_keeps_fingerprint():
+    # devices that measured identical draws merge to identical statistics
+    base = analytical_cost_model("time")
+    rows = [{"category": "restore", "energy": 3e-5}] * 9
+    a = MeasuredCostTable(base, "time")
+    a.ingest_rows(rows)
+    b = MeasuredCostTable(base, "time")
+    b.ingest_rows(rows + rows)
+    fleet = MeasuredCostTable.merge(a, a)
+    assert fleet.fingerprint() == b.fingerprint()
+
+
+def test_measured_table_merge_typed_errors():
+    base = analytical_cost_model("time")
+    other = analytical_cost_model("memory")
+    t1 = MeasuredCostTable(base, "time")
+    with pytest.raises(CalibrationError, match="at least one"):
+        MeasuredCostTable.merge()
+    with pytest.raises(CalibrationError, match="MeasuredCostTable"):
+        MeasuredCostTable.merge(t1, "nope")
+    with pytest.raises(CalibrationError, match="different graph kinds"):
+        MeasuredCostTable.merge(t1, MeasuredCostTable(base, "memory"))
+    with pytest.raises(CalibrationError, match="different base models"):
+        MeasuredCostTable.merge(t1, MeasuredCostTable(other, "time"))

@@ -1,0 +1,176 @@
+"""NS Optimizer ingestion tier: fixture round-trip + typed error paths.
+
+The checked-in fixture (tests/fixtures/ns_mini) is a 5-layer diamond
+(conv1 → conv2a/conv2b → concat → fc). Loading it must be deterministic:
+same topological order, same packet sizes, same read ordering on every
+load — the placement DP's inputs depend on the task sequence.
+"""
+
+import os
+
+import pytest
+
+from repro.core.calibration import MeasuredCostTable
+from repro.data.ns_optimizer import (
+    MB,
+    NSOptimizerError,
+    load_ns_model,
+)
+
+FIXTURE = os.path.join(
+    os.path.dirname(os.path.abspath(__file__)), "fixtures", "ns_mini"
+)
+PROF = os.path.join(FIXTURE, "prof.csv")
+DEP = os.path.join(FIXTURE, "dep.csv")
+
+
+def _write(tmp_path, name, text):
+    p = tmp_path / name
+    p.write_text(text)
+    return str(p)
+
+
+# ---------------------------------------------------------------------------
+# Round-trip on the checked-in fixture
+# ---------------------------------------------------------------------------
+
+
+def test_fixture_roundtrip():
+    model = load_ns_model(PROF, DEP)
+    g = model.graph
+
+    # deterministic Kahn order: prof.csv row order breaks ties
+    names = [t.name for t in g.tasks]
+    assert names == ["conv1", "conv2a", "conv2b", "concat", "fc"]
+    assert [l.name for l in model.layers] == names
+    assert model.n_layers == 5 and len(model.edges) == 5
+
+    # packet sizes are decimal megabytes; the sink keeps its output
+    assert g.packets["out:conv1"].nbytes == int(0.6 * MB)
+    assert g.packets["out:fc"].nbytes == int(0.004 * MB)
+    assert g.packets["out:fc"].keep
+    assert not g.packets["out:concat"].keep
+    assert g.packets["out:conv1"].meta["layer"] == "conv1"
+    assert g.packets["out:conv1"].meta["memory_bytes"] == int(1.5 * MB)
+
+    # reads follow prof.csv order; costs are the layer times
+    concat = next(t for t in g.tasks if t.name == "concat")
+    assert concat.reads == ("out:conv2a", "out:conv2b")
+    assert concat.cost == 0.005
+    fc = next(t for t in g.tasks if t.name == "fc")
+    assert fc.reads == ("out:concat",)
+    assert model.total_time_s == pytest.approx(0.058)
+
+    # loading twice is bit-stable
+    again = load_ns_model(PROF, DEP)
+    assert [t.name for t in again.graph.tasks] == names
+    assert [t.cost for t in again.graph.tasks] == [t.cost for t in g.tasks]
+    assert "5 layers" in model.summary()
+
+
+def test_calibration_rows_feed_measured_table():
+    model = load_ns_model(PROF, DEP)
+    rows = model.calibration_rows()
+    assert len(rows) == 5
+    assert all(r["category"] == "compute" for r in rows)
+    assert {r["kernel"] for r in rows} == {l.name for l in model.layers}
+    from repro.core.layer_profile import default_cost_model
+
+    table = MeasuredCostTable(default_cost_model("time"), kind="time")
+    table.ingest_rows(rows)
+    assert table.n_samples == 5
+    assert table.stats["compute"].mean == pytest.approx(
+        model.total_time_s / 5
+    )
+
+
+def test_fixture_graph_is_placeable():
+    from repro.core.placement import (
+        LinkModel,
+        PlacementSpec,
+        solve_placement_numpy,
+    )
+    from repro.core.layer_profile import default_cost_model
+
+    model = load_ns_model(PROF, DEP)
+    sweep = solve_placement_numpy(
+        model.graph,
+        default_cost_model("time"),
+        PlacementSpec(nodes=2, link=LinkModel(900.0)),
+    )
+    assert sweep.feasible()
+    plan = sweep.plan()
+    plan.validate()
+    plan.check_conservation()
+
+
+# ---------------------------------------------------------------------------
+# Typed error paths
+# ---------------------------------------------------------------------------
+
+
+GOOD_PROF = "a,0.1,0.5,1.0,0\nb,0.2,0.25,0.5,0\n"
+
+
+def test_prof_headerless_and_macs_optional(tmp_path):
+    prof = _write(tmp_path, "prof.csv", "a,0.1,0.5,1.0\nb,0.2,0.25,0.5\n")
+    dep = _write(tmp_path, "dep.csv", "a,b\n")
+    model = load_ns_model(prof, dep)
+    assert [l.name for l in model.layers] == ["a", "b"]
+    assert model.layers[0].macs == 0.0
+
+
+@pytest.mark.parametrize(
+    "text,match",
+    [
+        ("a,0.1,0.5\n", "at least 4 columns"),
+        ("a,0.1,0.5,oops,0\n", "non-numeric"),
+        ("a,-0.1,0.5,1.0,0\n", "negative"),
+        ("a,0.1,0.5,1.0,0\na,0.2,0.2,0.2,0\n", "duplicate layer"),
+        (",0.1,0.5,1.0,0\n", "empty layer name"),
+        ("", "no layers"),
+        ("Layer,time,out,mem,MACs\n", "no layers"),
+    ],
+)
+def test_malformed_prof_raises(tmp_path, text, match):
+    prof = _write(tmp_path, "prof.csv", text)
+    dep = _write(tmp_path, "dep.csv", "")
+    with pytest.raises(NSOptimizerError, match=match):
+        load_ns_model(prof, dep)
+
+
+@pytest.mark.parametrize(
+    "text,match",
+    [
+        ("a,ghost\n", "unknown layer"),
+        ("a,a\n", "self-edge"),
+        ("a\n", "Source,Destination"),
+        ("a,\n", "Source,Destination"),
+    ],
+)
+def test_malformed_dep_raises(tmp_path, text, match):
+    prof = _write(tmp_path, "prof.csv", GOOD_PROF)
+    dep = _write(tmp_path, "dep.csv", text)
+    with pytest.raises(NSOptimizerError, match=match):
+        load_ns_model(prof, dep)
+
+
+def test_cycle_raises_with_cyclic_layers(tmp_path):
+    prof = _write(
+        tmp_path, "prof.csv",
+        "a,0.1,0.5,1.0,0\nb,0.2,0.25,0.5,0\nc,0.3,0.1,0.2,0\n",
+    )
+    dep = _write(tmp_path, "dep.csv", "a,b\nb,c\nc,a\n")
+    with pytest.raises(NSOptimizerError, match="cycle") as exc:
+        load_ns_model(prof, dep)
+    # the offending layers are named
+    assert "'a'" in str(exc.value) and "'c'" in str(exc.value)
+
+
+def test_duplicate_edges_dedupe(tmp_path):
+    prof = _write(tmp_path, "prof.csv", GOOD_PROF)
+    dep = _write(tmp_path, "dep.csv", "a,b\na,b\n")
+    model = load_ns_model(prof, dep)
+    assert model.edges == (("a", "b"),)
+    b = next(t for t in model.graph.tasks if t.name == "b")
+    assert b.reads == ("out:a",)
